@@ -1,0 +1,72 @@
+"""Shared helpers for the paper-figure benchmarks."""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import (
+    DiagnosticConfig,
+    LinregProblem,
+    SimplifiedDelayModel,
+    StrategyConfig,
+    evaluate_schedule,
+    simulate,
+)
+
+PAPER_GRID = (0.2, 0.4, 0.6, 0.8, 1.0)   # the paper's beta set
+PAPER_TARGET = 2e-2                        # the paper's quoted readout gap
+
+
+def mean_curves(
+    problem: LinregProblem,
+    cfg_factory,
+    model,
+    *,
+    seeds: int,
+    max_iters: int,
+    t_max: float,
+    n_grid: int = 1200,
+    oracle_switch_times=None,
+):
+    """Average (gap, comp, comm) over seeds on a common time grid — the
+    paper's error E is an EXPECTATION; single-run gaps are far too noisy."""
+    tgrid = np.linspace(0.0, t_max, n_grid)
+    gs, cps, cms = [], [], []
+    for seed in range(seeds):
+        r = simulate(
+            problem,
+            cfg_factory(),
+            model,
+            seed=seed,
+            max_iters=max_iters,
+            eval_every=10,
+            oracle_switch_times=oracle_switch_times,
+        )
+        gs.append(np.interp(tgrid, r.times, r.gaps))
+        cps.append(np.interp(tgrid, r.times, r.comp_at_eval))
+        cms.append(np.interp(tgrid, r.times, r.comm_at_eval))
+    return tgrid, np.mean(gs, 0), np.mean(cps, 0), np.mean(cms, 0)
+
+
+def crossing(tgrid, gaps, target) -> int:
+    idx = np.nonzero(gaps <= target)[0]
+    return int(idx[0]) if idx.size else -1
+
+
+def report_at_target(tgrid, g, cp, cm, target=PAPER_TARGET):
+    i = crossing(tgrid, g, target)
+    if i < 0:
+        return np.inf, np.inf, np.inf
+    return float(tgrid[i]), float(cp[i]), float(cm[i])
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.elapsed = time.time() - self.t0

@@ -1,0 +1,119 @@
+"""Paper Fig. 4: linear-regression simulation (n=20, v=400, lambda_y=1,
+x=0.01, k<=10, beta in {0.2,...,1.0}).
+
+Three rows per strategy pair:
+  theory       — analytic schedules (Thm. 2 switching; zero detection cost)
+  sim+oracle   — event simulation with the analytic switch TIMES
+  sim+diag     — event simulation with run-time stationarity diagnostics
+                 (the paper's own operating mode)
+
+Paper claims at gap 2e-2: runtime 'roughly halved', computation -59.9%,
+communication +15.7%. The paper does not state (d, eta, diagnostic
+details); we calibrate eta so the analytic model reproduces the paper's
+numbers (see DESIGN.md §8 / EXPERIMENTS.md §Paper) and report all three
+rows so the diagnostic sensitivity is visible rather than hidden.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (
+    DiagnosticConfig,
+    LinregProblem,
+    SGDHyperParams,
+    SimplifiedDelayModel,
+    StrategyConfig,
+    evaluate_schedule,
+)
+
+from .common import PAPER_GRID, PAPER_TARGET, mean_curves, report_at_target
+
+
+def _calibrated_hp(problem: LinregProblem) -> SGDHyperParams:
+    lam = np.linalg.eigvalsh(2.0 * problem.X.T @ problem.X / problem.v)
+    c = float(2.0 * lam.min())
+    # Empirical floor calibration: floor(phi=1) ~ 0.1846 at eta=9.284e-6
+    # scales linearly in eta (measured; see EXPERIMENTS.md §Paper).
+    fl1 = 0.1846 * problem.eta / 9.284e-6
+    L = 2.0
+    sigma2 = fl1 * 2 * c * problem.s / (problem.eta * L)
+    return SGDHyperParams(eta=problem.eta, L=L, sigma_grad2=sigma2, c=c,
+                          s=problem.s)
+
+
+def run(fast: bool = True):
+    problem = LinregProblem.generate(v=400, d=10, n_workers=20, seed=1)
+    model = SimplifiedDelayModel(lambda_y=1.0, x=0.01)
+    hp = _calibrated_hp(problem)
+    e0 = problem.gap(np.zeros(problem.d))
+    seeds = 6 if fast else 24
+    max_iters = 20_000 if fast else 60_000
+
+    def cfg(strategy, diag=None):
+        kw = dict(n=20, s=20, k_max=10, beta_grid=PAPER_GRID)
+        if diag is not None:
+            kw["diagnostic"] = diag
+        return StrategyConfig(strategy, **kw)
+
+    # --- theory row ------------------------------------------------------
+    theory = {}
+    for strat in ("adaptive_kbeta", "adaptive_k"):
+        theory[strat] = evaluate_schedule(
+            cfg(strat), model, hp, e0=e0, target=PAPER_TARGET
+        )
+    to, ta = theory["adaptive_kbeta"], theory["adaptive_k"]
+    print("row          | T_ours  T_ak   runtime_ratio  comp_red  comm_ovh")
+    print(
+        f"theory       | {to.runtime:7.1f} {ta.runtime:7.1f} "
+        f"{to.runtime / ta.runtime:10.3f} {1 - to.comp_cost / ta.comp_cost:9.1%} "
+        f"{to.comm_cost / ta.comm_cost - 1:9.1%}"
+    )
+
+    out = {"theory": (to.runtime / ta.runtime,
+                      1 - to.comp_cost / ta.comp_cost,
+                      to.comm_cost / ta.comm_cost - 1)}
+
+    # --- sim + oracle switching -----------------------------------------
+    t_max = ta.runtime * 2.5
+    rows = {}
+    for strat in ("adaptive_kbeta", "adaptive_k"):
+        times = [st.t_end for st in theory[strat].stages[:-1]]
+        tg, g, cp, cm = mean_curves(
+            problem, lambda s=strat: cfg(s), model,
+            seeds=seeds, max_iters=max_iters, t_max=t_max,
+            oracle_switch_times=times,
+        )
+        rows[strat] = report_at_target(tg, g, cp, cm)
+    (T1, C1, M1), (T2, C2, M2) = rows["adaptive_kbeta"], rows["adaptive_k"]
+    print(
+        f"sim+oracle   | {T1:7.1f} {T2:7.1f} {T1 / T2:10.3f} "
+        f"{1 - C1 / C2:9.1%} {M1 / M2 - 1:9.1%}"
+    )
+    out["sim_oracle"] = (T1 / T2, 1 - C1 / C2, M1 / M2 - 1)
+
+    # --- sim + run-time diagnostics --------------------------------------
+    diag = DiagnosticConfig(kind="distance", threshold=1.0, ratio=1.4,
+                            min_iters=8, consecutive=2)
+    for strat in ("adaptive_kbeta", "adaptive_k"):
+        tg, g, cp, cm = mean_curves(
+            problem, lambda s=strat: cfg(s, diag), model,
+            seeds=seeds, max_iters=max_iters, t_max=t_max,
+        )
+        rows[strat] = report_at_target(tg, g, cp, cm)
+    (T1, C1, M1), (T2, C2, M2) = rows["adaptive_kbeta"], rows["adaptive_k"]
+    print(
+        f"sim+diag     | {T1:7.1f} {T2:7.1f} {T1 / T2:10.3f} "
+        f"{1 - C1 / C2:9.1%} {M1 / M2 - 1:9.1%}"
+    )
+    out["sim_diag"] = (T1 / T2, 1 - C1 / C2, M1 / M2 - 1)
+
+    print(
+        "\npaper claims | runtime 'roughly halves' (ratio ~0.5), "
+        "comp -59.9%, comm +15.7%"
+    )
+    return out
+
+
+if __name__ == "__main__":
+    run(fast=False)

@@ -1,0 +1,84 @@
+"""Paper Figs. 5-7 (Appendix D): generalized delay model (Def. 2) regimes.
+
+Three regimes, error-over-time for four schemes: ours (adaptive-k,beta),
+adaptive-k [39], and fastest-k [38] at (k,beta) in {(1,0.2),(5,1),(10,1)}:
+
+  Fig.5  computation dominates   (lambda_y = 1,   lambda_x = 100)
+  Fig.6  comparable              (lambda_y = 20,  lambda_x = 5/3)
+  Fig.7  communication dominates (lambda_y = 100, lambda_x = 1)
+
+Claims: largest speedup over adaptive-k in regime 1, notable in regime 2,
+none in regime 3.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (
+    DiagnosticConfig,
+    GeneralizedDelayModel,
+    LinregProblem,
+    StrategyConfig,
+)
+
+from .common import PAPER_GRID, PAPER_TARGET, mean_curves, report_at_target
+
+REGIMES = {
+    "fig5_comp_dominates": GeneralizedDelayModel(lambda_x=100.0, lambda_y=1.0),
+    "fig6_comparable": GeneralizedDelayModel(lambda_x=5.0 / 3.0, lambda_y=20.0),
+    "fig7_comm_dominates": GeneralizedDelayModel(lambda_x=1.0, lambda_y=100.0),
+}
+
+SCHEMES = {
+    "ours": ("adaptive_kbeta", {}),
+    "adaptive_k": ("adaptive_k", {}),
+    "fastest_k(1,0.2)": ("fastest_k", {"k0": 1, "beta0": 0.2}),
+    "fastest_k(5,1)": ("fastest_k", {"k0": 5}),
+    "fastest_k(10,1)": ("fastest_k", {"k0": 10}),
+}
+
+
+def run(fast: bool = True):
+    problem = LinregProblem.generate(v=400, d=10, n_workers=20, seed=1)
+    seeds = 4 if fast else 16
+    max_iters = 15_000 if fast else 50_000
+    diag = DiagnosticConfig(kind="distance", threshold=1.0, ratio=1.4,
+                            min_iters=8, consecutive=2)
+
+    out = {}
+    for regime, model in REGIMES.items():
+        t_scale = 1.0 / model.lambda_x + 1.0 / model.lambda_y
+        t_max = 12_000 * t_scale if "comm" in regime else 4_000 * t_scale
+        print(f"\n== {regime}: lambda_x={model.lambda_x:.3g} "
+              f"lambda_y={model.lambda_y:.3g} ==")
+        times = {}
+        for name, (strategy, kw) in SCHEMES.items():
+            def factory(strategy=strategy, kw=kw):
+                base = dict(n=20, s=20, k_max=10, beta_grid=PAPER_GRID,
+                            diagnostic=diag)
+                if strategy == "fastest_k":
+                    base["k0"] = kw.get("k0", 1)
+                    if "beta0" in kw:
+                        # fixed (k, beta) baseline from [38]
+                        return StrategyConfig("fastest_k", n=20, s=20,
+                                              k0=kw["k0"], beta0=kw["beta0"],
+                                              beta_grid=PAPER_GRID)
+                return StrategyConfig(strategy, **base)
+
+            tg, g, cp, cm = mean_curves(
+                problem, factory, model, seeds=seeds,
+                max_iters=max_iters, t_max=t_max,
+            )
+            T, C, M = report_at_target(tg, g, cp, cm)
+            times[name] = (T, C, M)
+            print(f"  {name:18s} T(2e-2)={T:9.1f} comp={C:9.0f} comm={M:9.0f}")
+        out[regime] = times
+        if np.isfinite(times["ours"][0]) and np.isfinite(times["adaptive_k"][0]):
+            print(f"  -> ours/adaptive_k runtime ratio: "
+                  f"{times['ours'][0] / times['adaptive_k'][0]:.3f}")
+    return out
+
+
+if __name__ == "__main__":
+    run(fast=False)

@@ -1,0 +1,32 @@
+"""Roofline report: three terms per (arch x shape x mesh) from dry-run
+artifacts (benchmarks counterpart of EXPERIMENTS.md §Roofline)."""
+
+from __future__ import annotations
+
+from pathlib import Path
+
+from repro.analysis.roofline import format_table, load_rows
+
+ARTIFACTS = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def run(fast: bool = True, mesh: str = "pod16x16"):
+    rows = load_rows(ARTIFACTS, mesh=mesh, variant="baseline")
+    if not rows:
+        print(f"(no dry-run artifacts found under {ARTIFACTS} — run "
+              f"`python -m repro.launch.dryrun --all` first)")
+        return {}
+    print(format_table(rows))
+    print("\nper-cell dominant-term notes:")
+    for r in rows:
+        print(f"  {r.arch} × {r.shape}: {r.note}")
+    worst = min(rows, key=lambda r: r.useful_ratio)
+    most_coll = max(rows, key=lambda r: r.collective_s / max(r.compute_s, 1e-12))
+    print(f"\nworst useful-compute cell : {worst.cell} ({worst.useful_ratio:.1%})")
+    print(f"most collective-bound cell: {most_coll.cell} "
+          f"(coll/compute = {most_coll.collective_s / max(most_coll.compute_s, 1e-12):.2f})")
+    return {r.cell: r.useful_ratio for r in rows}
+
+
+if __name__ == "__main__":
+    run(fast=False)

@@ -1,0 +1,58 @@
+"""Benchmark runner: one module per paper table/figure + the roofline report.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+Prints a `name,seconds,status` CSV at the end.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale seeds/grids (slow)")
+    ap.add_argument("--only", type=str, default=None)
+    args = ap.parse_args()
+    fast = not args.full
+
+    from . import fig1_3_theory, fig4_simulation, fig5to7_general_model
+    from . import fig8to9_costs, roofline_report
+
+    benches = {
+        "fig1_3_theory": fig1_3_theory.run,
+        "fig4_simulation": fig4_simulation.run,
+        "fig5to7_general_model": fig5to7_general_model.run,
+        "fig8to9_costs": fig8to9_costs.run,
+        "roofline_report": roofline_report.run,
+    }
+    if args.only:
+        benches = {k: v for k, v in benches.items() if args.only in k}
+
+    summary = []
+    failed = 0
+    for name, fn in benches.items():
+        print(f"\n{'=' * 72}\n== {name}\n{'=' * 72}", flush=True)
+        t0 = time.time()
+        try:
+            fn(fast=fast)
+            summary.append((name, time.time() - t0, "ok"))
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            summary.append((name, time.time() - t0, f"FAIL: {e}"))
+            failed += 1
+
+    print("\nname,seconds,status")
+    for name, secs, status in summary:
+        print(f"{name},{secs:.1f},{status}")
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Fault-tolerance demo: worker failure, straggler demotion, resume.
+
+1. Train with the adaptive controller; at step 60 worker 0 dies — its
+   gradient mask goes to zero permanently and the controller reprices all
+   order statistics with n-1 workers.
+2. A persistent straggler (worker 1, 6x slower) is demoted by the
+   telemetry EWMA tracker.
+3. Training checkpoints asynchronously; we then kill the loop and resume
+   from the latest checkpoint, verifying step/stage state round-trips.
+
+    PYTHONPATH=src python examples/elastic_failover.py
+"""
+
+import tempfile
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import DiagnosticConfig, SimplifiedDelayModel, StrategyConfig
+from repro.data import StagedBatcher, TokenStream
+from repro.models import build_model
+from repro.optim.optimizers import get_optimizer
+from repro.runtime.train_loop import TrainLoopConfig, train
+
+
+def main():
+    cfg = get_config("smollm-135m").reduced(
+        n_layers=2, d_model=64, vocab_size=256, max_seq_len=64
+    )
+    model = build_model(cfg)
+    optimizer = get_optimizer("adamw")
+    n = 8
+    strategy = StrategyConfig(
+        "adaptive_kbeta", n=n, s=4, k_max=4, beta_grid=(0.5, 1.0),
+        diagnostic=DiagnosticConfig(kind="loss", rel_tol=0.02, min_iters=8,
+                                    consecutive=2),
+    )
+    delay = SimplifiedDelayModel(lambda_y=1.0, x=0.05)
+    batcher = StagedBatcher(TokenStream(cfg.vocab_size), n_workers=n,
+                            global_batch=32, seq_len=64)
+
+    with tempfile.TemporaryDirectory() as ckdir:
+        print("== phase 1: run 100 steps with failure injection at step 60 ==")
+        out = train(
+            model, optimizer, strategy, delay, batcher,
+            TrainLoopConfig(
+                total_steps=100, checkpoint_dir=ckdir, checkpoint_every=40,
+                log_every=25, fail_worker_at=60, fail_worker_id=0,
+                demote_after_ewma=5.0,
+            ),
+        )
+        ctrl = out["controller"]
+        print(f"workers remaining in controller: n={ctrl.cfg.n} (started {n})")
+        assert ctrl.cfg.n == n - 1, "failed worker must be removed"
+
+        print("\n== phase 2: resume from the latest checkpoint ==")
+        out2 = train(
+            model, optimizer, strategy, delay, batcher,
+            TrainLoopConfig(
+                total_steps=130, checkpoint_dir=ckdir, checkpoint_every=40,
+                log_every=25,
+            ),
+        )
+        steps = [h["step"] for h in out2["history"]]
+        print(f"resumed at step {steps[0]} (checkpointed at 80), "
+              f"ran to {steps[-1]}")
+        assert steps[0] == 80, "must resume from the saved step"
+        print("\nfault-tolerance demo OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Serving demo: batched autoregressive decode with KV/SSM caches.
+
+Runs prefill on a batch of prompts then decodes N tokens per sequence,
+exercising the same decode_step the dry-run lowers at 32k/500k. Works for
+every registered arch family (attention KV caches, MLA latent caches,
+SSM/xLSTM recurrent states).
+
+    PYTHONPATH=src python examples/serve_lm.py --arch xlstm --tokens 32
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.models.layers import init_from_specs
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--tokens", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    model = build_model(cfg)
+    rng = jax.random.PRNGKey(0)
+    params = model.init(rng)
+
+    B, P, N = args.batch, args.prompt_len, args.tokens
+    max_len = P + N + 1
+    prompts = jax.random.randint(rng, (B, P), 0, cfg.vocab_size)
+    caches = init_from_specs(rng, model.cache_specs(B, max_len))
+
+    decode = jax.jit(model.decode_step)
+
+    # Prefill by stepping the prompt through the decode path (fills the
+    # caches exactly; the batched prefill kernel is the dry-run's job).
+    t0 = time.time()
+    logits = None
+    for t in range(P):
+        logits, caches = decode(params, prompts[:, t : t + 1], caches, jnp.int32(t))
+    t_prefill = time.time() - t0
+
+    # Greedy decode.
+    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    out_tokens = [tok]
+    t0 = time.time()
+    for t in range(P, P + N):
+        logits, caches = decode(params, tok, caches, jnp.int32(t))
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        out_tokens.append(tok)
+    dt = time.time() - t0
+
+    gen = jnp.concatenate(out_tokens, axis=1)
+    print(f"arch={cfg.name} batch={B} prompt={P} new_tokens={N}")
+    print(f"prefill {t_prefill:.2f}s, decode {dt:.2f}s "
+          f"({B * N / max(dt, 1e-9):.1f} tok/s on CPU interpret)")
+    for b in range(min(B, 2)):
+        print(f"  seq{b}: {list(map(int, gen[b][:16]))} ...")
+
+
+if __name__ == "__main__":
+    main()

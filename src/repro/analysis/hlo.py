@@ -1,0 +1,77 @@
+"""HLO text analysis: collective byte accounting for the roofline model.
+
+``cost_analysis()`` does not expose collective traffic, so we parse the
+compiled module text and sum operand sizes of every communication op:
+all-gather, all-reduce, reduce-scatter, all-to-all, collective-permute.
+
+Byte convention (per §Roofline): for each collective op we count the
+bytes of its OUTPUT buffer(s) on one device — the amount of data that
+must cross links per device per step, up to the (regime-dependent,
+O(1)-ish) algorithm factor which we fold into the achievable-bandwidth
+constant. This makes deltas between variants directly comparable, which
+is what the perf loop optimizes.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+__all__ = ["collective_bytes_from_hlo", "DTYPE_BYTES"]
+
+DTYPE_BYTES = {
+    "pred": 1,
+    "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVE_OPS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# e.g.  "bf16[16,1024,512]{2,1,0} all-gather(...)" — possibly inside a tuple.
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\w+\[[\d,]*\][^ ]*))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, int]:
+    """Sum per-device output bytes of each collective kind. '-done' ops are
+    skipped so async (start/done) pairs are not double counted."""
+    out: Dict[str, int] = defaultdict(int)
+    counts: Dict[str, int] = defaultdict(int)
+    for m in _OP_RE.finditer(hlo_text):
+        tuple_shapes, single_shape, kind = m.group(1), m.group(2), m.group(3)
+        # Skip the -done halves of async pairs.
+        tail = hlo_text[m.end() - 1 : m.end() + 1]
+        full_match = m.group(0)
+        if "-done(" in full_match:
+            continue
+        text = tuple_shapes if tuple_shapes is not None else single_shape
+        nbytes = sum(
+            _shape_bytes(dt, dims) for dt, dims in _SHAPE_RE.findall(text or "")
+        )
+        out[kind] += nbytes
+        counts[f"{kind}_count"] += 1
+    result = dict(out)
+    result.update(counts)
+    return result

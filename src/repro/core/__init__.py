@@ -1,0 +1,61 @@
+"""The paper's contribution: adaptive-(k, beta) straggler-tolerant SGD.
+
+Public surface:
+  delay models (Def. 1/2)        -> repro.core.delay_models
+  order statistics (Prop1/Thm5)  -> repro.core.order_stats
+  error model (Eq. 1/10)         -> repro.core.error_model
+  switching times (Thm. 2)       -> repro.core.switching
+  optimal load beta* (Thm3/Cor4) -> repro.core.beta_opt
+  strategies + run-time control  -> repro.core.controller
+  stationarity diagnostics       -> repro.core.diagnostics
+  analytic schedule roll-out     -> repro.core.schedule
+  straggler simulation engine    -> repro.core.simulation
+"""
+
+from .beta_opt import beta_min_for, cor4_beta, numerical_beta, optimal_beta
+from .controller import Controller, Stage, StrategyConfig, next_stage
+from .delay_models import (
+    GeneralizedDelayModel,
+    SimplifiedDelayModel,
+    fit_generalized_mm,
+    fit_simplified_mle,
+)
+from .diagnostics import DiagnosticConfig, DistanceDiagnostic, PflugDiagnostic
+from .error_model import SGDHyperParams, error_after, error_floor, time_to_error
+from .order_stats import expected_kth, expected_kth_derivative, harmonic_tail
+from .schedule import ScheduleResult, StageRecord, evaluate_schedule
+from .simulation import LinregProblem, SimResult, simulate
+from .switching import gap_at_switch, switching_interval
+
+__all__ = [
+    "GeneralizedDelayModel",
+    "SimplifiedDelayModel",
+    "fit_simplified_mle",
+    "fit_generalized_mm",
+    "expected_kth",
+    "expected_kth_derivative",
+    "harmonic_tail",
+    "SGDHyperParams",
+    "error_floor",
+    "error_after",
+    "time_to_error",
+    "switching_interval",
+    "gap_at_switch",
+    "beta_min_for",
+    "cor4_beta",
+    "numerical_beta",
+    "optimal_beta",
+    "Controller",
+    "Stage",
+    "StrategyConfig",
+    "next_stage",
+    "DiagnosticConfig",
+    "DistanceDiagnostic",
+    "PflugDiagnostic",
+    "ScheduleResult",
+    "StageRecord",
+    "evaluate_schedule",
+    "LinregProblem",
+    "SimResult",
+    "simulate",
+]

@@ -1,0 +1,3 @@
+from .pipeline import StagedBatcher, TokenStream, make_frame_stream
+
+__all__ = ["StagedBatcher", "TokenStream", "make_frame_stream"]

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels (pl.pallas_call + BlockSpec VMEM tiling).
+
+Each kernel is a subpackage: kernel.py (the pallas_call), ops.py (jit'd
+public wrapper), ref.py (pure-jnp oracle). All validated in interpret
+mode against the oracles across shape/dtype sweeps (tests/test_kernels).
+
+  flash_attention   — GQA/causal flash attention (train/prefill hot path)
+  decode_attention  — flash-decode: single query over long KV caches
+  ssd_scan          — Mamba2 SSD chunked scan with carried state
+  rmsnorm           — fused row-block RMSNorm
+"""

@@ -1,0 +1,3 @@
+from .ops import decode_ref, flash_decode
+
+__all__ = ["flash_decode", "decode_ref"]

@@ -1,0 +1,117 @@
+"""Pallas TPU flash-decode: single-query attention over a long KV cache.
+
+Decode at 32k-500k context is HBM-bound (the roofline table's verdict on
+every decode cell): the step reads the whole KV cache once. This kernel
+streams the cache HBM->VMEM in blocks on the LAST (sequential) grid dim,
+carrying partial softmax statistics (m, l, acc) in VMEM scratch, and
+masks beyond the valid length — one pass, no (S,) score materialization
+in HBM, MXU-shaped (G x block_kv) @ (block_kv x D) products.
+
+Grid = (B, Hkv, num_kv_blocks); each program owns one (batch, kv-head)
+pair and reduces over its query GROUP (GQA: G = H / Hkv queries share a
+kv head) so the cache block is read once for all G queries.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["decode_attention_fwd"]
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, scale, block_kv):
+    ikv = pl.program_id(2)
+    n_kv = pl.num_programs(2)
+
+    @pl.when(ikv == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[0, 0]
+    kv_start = ikv * block_kv
+
+    @pl.when(kv_start < length)
+    def _step():
+        q = q_ref[0, 0, :, :].astype(jnp.float32) * scale    # (G, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)            # (bkv, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)            # (bkv, Dv)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                                     # (G, bkv)
+        kv_ids = kv_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kv_ids < length, s, NEG_INF)
+
+        m_prev = m_ref[:, 0]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[:, 0] = l_ref[:, 0] * corr + p.sum(axis=1)
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+        m_ref[:, 0] = m_new
+
+    @pl.when(ikv == n_kv - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[:, 0], 1e-30)
+        o_ref[0, 0, :, :] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention_fwd(
+    q: jax.Array,        # (B, H, D) — single query position per sequence
+    k: jax.Array,        # (B, S, Hkv, D)
+    v: jax.Array,        # (B, S, Hkv, Dv)
+    lengths: jax.Array,  # (B,) valid prefix length per sequence
+    *,
+    block_kv: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, D = q.shape
+    S, Hkv, Dv = k.shape[1], k.shape[2], v.shape[3]
+    G = H // Hkv
+    scale = 1.0 / math.sqrt(D)
+
+    block_kv = min(block_kv, S)
+    pad = (-S) % block_kv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n_kv = (S + pad) // block_kv
+
+    # Group queries by kv head: (B, Hkv, G, D).
+    qg = q.reshape(B, Hkv, G, D)
+    lengths = lengths.astype(jnp.int32).reshape(B, 1)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, block_kv=block_kv),
+        grid=(B, Hkv, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, ikv: (b, h, 0, 0)),
+            pl.BlockSpec((1, block_kv, 1, D), lambda b, h, ikv: (b, ikv, h, 0)),
+            pl.BlockSpec((1, block_kv, 1, Dv), lambda b, h, ikv: (b, ikv, h, 0)),
+            pl.BlockSpec((1, 1), lambda b, h, ikv: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, Dv), lambda b, h, ikv: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, Dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, Dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, k, v, lengths)
+    return out.reshape(B, H, Dv)

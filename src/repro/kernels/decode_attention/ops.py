@@ -1,0 +1,17 @@
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import decode_attention_fwd
+from .ref import decode_ref
+
+__all__ = ["flash_decode", "decode_ref"]
+
+
+@functools.partial(jax.jit, static_argnames=("block_kv", "interpret"))
+def flash_decode(q, k, v, lengths, *, block_kv: int = 512,
+                 interpret: bool = False):
+    return decode_attention_fwd(q, k, v, lengths, block_kv=block_kv,
+                                interpret=interpret)

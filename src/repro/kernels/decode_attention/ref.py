@@ -1,0 +1,11 @@
+"""Oracle: the model stack's own masked single-query attention."""
+
+import jax.numpy as jnp
+
+from repro.models.attention import decode_attention as _model_decode
+
+
+def decode_ref(q, k, v, lengths):
+    # model path takes (B, 1, H, D); kernel takes (B, H, D).
+    out = _model_decode(q[:, None], k, v, length=lengths)
+    return out[:, 0]

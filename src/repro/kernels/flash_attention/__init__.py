@@ -1,0 +1,3 @@
+from .ops import attention_ref, flash_attention
+
+__all__ = ["flash_attention", "attention_ref"]

@@ -1,0 +1,25 @@
+"""Jit'd public wrapper for the flash attention kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import flash_attention_fwd
+from .ref import attention_ref
+
+__all__ = ["flash_attention", "attention_ref"]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "block_q", "block_kv", "interpret")
+)
+def flash_attention(
+    q, k, v, *, causal: bool = True, block_q: int = 128, block_kv: int = 128,
+    interpret: bool = False,
+):
+    return flash_attention_fwd(
+        q, k, v, causal=causal, block_q=block_q, block_kv=block_kv,
+        interpret=interpret,
+    )

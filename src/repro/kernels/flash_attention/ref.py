@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the flash attention kernel (GQA, optional causal)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_ref"]
+
+
+def attention_ref(
+    q: jax.Array,   # (B, Sq, H, D)
+    k: jax.Array,   # (B, Skv, Hkv, D)
+    v: jax.Array,   # (B, Skv, Hkv, Dv)
+    *,
+    causal: bool = True,
+) -> jax.Array:
+    B, Sq, H, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = 1.0 / math.sqrt(D)
+    qf = q.astype(jnp.float32).reshape(B, Sq, Hkv, G, D) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kf)
+    if causal:
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Skv)[None, :]
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, vf)
+    return o.reshape(B, Sq, H, -1).astype(q.dtype)

@@ -1,0 +1,17 @@
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import rmsnorm_fwd
+from .ref import rmsnorm_ref
+
+__all__ = ["rmsnorm", "rmsnorm_ref"]
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def rmsnorm(x, scale, *, eps: float = 1e-6, block_rows: int = 256,
+            interpret: bool = False):
+    return rmsnorm_fwd(x, scale, eps=eps, block_rows=block_rows,
+                       interpret=interpret)

@@ -1,0 +1,5 @@
+"""Oracle: the model stack's own rms_norm."""
+
+from repro.models.layers import rms_norm as rmsnorm_ref
+
+__all__ = ["rmsnorm_ref"]

@@ -1,0 +1,3 @@
+from .ops import ssd_ref, ssd_scan
+
+__all__ = ["ssd_scan", "ssd_ref"]

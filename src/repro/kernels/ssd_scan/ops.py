@@ -1,0 +1,17 @@
+"""Jit'd public wrapper for the SSD scan kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import ssd_scan_fwd
+from .ref import ssd_ref
+
+__all__ = ["ssd_scan", "ssd_ref"]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 128, interpret: bool = False):
+    return ssd_scan_fwd(x, dt, A, Bm, Cm, chunk=chunk, interpret=interpret)

@@ -1,0 +1,8 @@
+"""Oracle for the SSD kernel: the validated step-by-step recurrence."""
+
+from repro.models.mamba2 import ssd_recurrent
+
+
+def ssd_ref(x, dt, A, Bm, Cm):
+    y, _ = ssd_recurrent(x, dt, A, Bm, Cm)
+    return y

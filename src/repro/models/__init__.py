@@ -1,0 +1,5 @@
+"""Model zoo: composable JAX definitions for all assigned architectures."""
+
+from .model import Model, build_model, count_params_analytic
+
+__all__ = ["Model", "build_model", "count_params_analytic"]

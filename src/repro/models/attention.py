@@ -1,0 +1,345 @@
+"""Attention: GQA (with rope, qk-norm, bias options) and DeepSeek MLA.
+
+Three execution paths share one set of weights:
+  * train/prefill: memory-efficient chunked attention (lax.scan over KV
+    chunks with online softmax) — O(seq * chunk) activation memory, which
+    is what makes the 32k-prefill cells lowerable; optionally routed to
+    the Pallas flash kernel (cfg.use_pallas) on TPU.
+  * decode: single-query attention against a KV cache, with optional
+    sequence-parallel cache (shard the cache over 'model', merge partial
+    softmax statistics with psum — flash-decode style).
+
+KV caches are plain pytrees: {"k": (B, S, Hkv, D), "v": ...} for GQA and
+{"ckv": (B, S, r_kv), "k_rope": (B, S, r_qk)} for MLA (the latent cache is
+exactly MLA's memory saving).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLAConfig, ModelConfig
+from .layers import ParamSpec, apply_rope, norm_apply, norm_specs
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# GQA specs
+# ---------------------------------------------------------------------------
+
+def gqa_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = cfg.dtype
+    out = {
+        "wq": ParamSpec((d, h, hd), ("embed", "heads", "head_dim"), "scaled", dt),
+        "wk": ParamSpec((d, hkv, hd), ("embed", "kv_heads", "head_dim"), "scaled", dt),
+        "wv": ParamSpec((d, hkv, hd), ("embed", "kv_heads", "head_dim"), "scaled", dt),
+        "wo": ParamSpec((h, hd, d), ("heads", "head_dim", "embed"), "scaled", dt),
+    }
+    if cfg.qkv_bias:
+        out["bq"] = ParamSpec((h, hd), ("heads", "head_dim"), "zeros", dt)
+        out["bk"] = ParamSpec((hkv, hd), ("kv_heads", "head_dim"), "zeros", dt)
+        out["bv"] = ParamSpec((hkv, hd), ("kv_heads", "head_dim"), "zeros", dt)
+    if cfg.qk_norm:
+        out["q_norm"] = norm_specs(hd, "rmsnorm", dt)
+        out["k_norm"] = norm_specs(hd, "rmsnorm", dt)
+    return out
+
+
+def _project_qkv(params: Dict, x: jax.Array, cfg: ModelConfig, positions: jax.Array):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    if cfg.qk_norm:
+        q = norm_apply(params["q_norm"], q, "rmsnorm")
+        k = norm_apply(params["k_norm"], k, "rmsnorm")
+    if cfg.rope_theta > 0:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# Memory-efficient chunked attention (pure jnp oracle / baseline path)
+# ---------------------------------------------------------------------------
+
+def mea_attention(
+    q: jax.Array,          # (B, Sq, H, D)
+    k: jax.Array,          # (B, Skv, Hkv, D)
+    v: jax.Array,          # (B, Skv, Hkv, D)
+    *,
+    causal: bool,
+    chunk: int,
+    q_offset: int = 0,     # absolute position of q[0] (prefill continuation)
+) -> jax.Array:
+    """Online-softmax attention, scanned over KV chunks.
+
+    Supports distinct K and V head dims (MLA: qk=192, v=128).
+    """
+    B, Sq, H, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    G = H // Hkv
+    scale = 1.0 / math.sqrt(D)
+    qf = (q * scale).astype(jnp.float32).reshape(B, Sq, Hkv, G, D)
+
+    chunk = min(chunk, Skv)
+    n_chunks = math.ceil(Skv / chunk)
+    pad = n_chunks * chunk - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.astype(jnp.float32).reshape(B, n_chunks, chunk, Hkv, D)
+    vc = v.astype(jnp.float32).reshape(B, n_chunks, chunk, Hkv, Dv)
+
+    q_pos = q_offset + jnp.arange(Sq)
+
+    def body(carry, inputs):
+        m, l, acc = carry
+        kj, vj, j = inputs
+        # scores: (B, Sq, Hkv, G, chunk)
+        s = jnp.einsum("bqhgd,bchd->bqhgc", qf, kj)
+        kv_pos = j * chunk + jnp.arange(chunk)
+        valid = kv_pos < Skv
+        if causal:
+            valid = valid[None, :] & (q_pos[:, None] >= kv_pos[None, :])
+            s = jnp.where(valid[None, :, None, None, :], s, NEG_INF)
+        else:
+            s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum("bqhgc,bchd->bqhgd", p, vj)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Sq, Hkv, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, Hkv, G), jnp.float32)
+    acc0 = jnp.zeros((B, Sq, Hkv, G, Dv), jnp.float32)
+    kc_t = jnp.moveaxis(kc, 1, 0)
+    vc_t = jnp.moveaxis(vc, 1, 0)
+    # Remat each chunk: backward recomputes the (B,Sq,H,chunk) score tile
+    # instead of saving it — the chunked-attention memory win would
+    # otherwise be lost to autodiff residuals (flash-attention recompute).
+    (m, l, acc), _ = jax.lax.scan(
+        jax.checkpoint(body), (m0, l0, acc0), (kc_t, vc_t, jnp.arange(n_chunks))
+    )
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(B, Sq, H, Dv).astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,          # (B, 1, H, D)
+    k: jax.Array,          # (B, S, Hkv, D) — cache incl. current token
+    v: jax.Array,
+    *,
+    length: Optional[jax.Array] = None,  # valid prefix length per batch elt
+) -> jax.Array:
+    """Single-token attention against the full cache (decode hot path)."""
+    B, _, H, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = 1.0 / math.sqrt(D)
+    qf = (q * scale).astype(jnp.float32).reshape(B, Hkv, G, D)
+    s = jnp.einsum("bhgd,bshd->bhgs", qf, k.astype(jnp.float32))
+    if length is not None:
+        pos = jnp.arange(S)
+        s = jnp.where(pos[None, None, None, :] < length[:, None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, v.astype(jnp.float32))
+    return out.reshape(B, 1, H, D).astype(q.dtype)
+
+
+def gqa_apply(
+    params: Dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    positions: jax.Array,
+    cache: Optional[Dict] = None,
+    cache_index: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    """Full GQA block. With a cache, runs one-token decode and returns the
+    updated cache; without, runs train/prefill chunked attention."""
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    if cache is None:
+        causal = cfg.causal and not cfg.is_encoder
+        if cfg.use_pallas:
+            # TPU hot path: the Pallas flash kernel (interpret=True turns
+            # it into a CPU-executable reference for tests/dev boxes).
+            from repro.kernels.flash_attention import flash_attention
+
+            interpret = jax.default_backend() != "tpu"
+            out = flash_attention(q, k, v, causal=causal, interpret=interpret)
+        else:
+            out = mea_attention(q, k, v, causal=causal, chunk=cfg.attn_chunk)
+        new_cache = None
+    else:
+        idx = cache_index  # scalar int32: write position
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, idx, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, idx, axis=1)
+        length = jnp.full((x.shape[0],), idx + 1, jnp.int32)
+        out = decode_attention(q, ck, cv, length=length)
+        new_cache = {"k": ck, "v": cv}
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, new_cache
+
+
+def gqa_cache_spec(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, ParamSpec]:
+    shape = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    axes = ("act_batch", "act_kv_seq", "kv_heads", "head_dim")
+    return {
+        "k": ParamSpec(shape, axes, "zeros", cfg.dtype),
+        "v": ParamSpec(shape, axes, "zeros", cfg.dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# DeepSeek MLA
+# ---------------------------------------------------------------------------
+
+def mla_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    m: MLAConfig = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    dt = cfg.dtype
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "wq_a": ParamSpec((d, m.q_lora_rank), ("embed", "q_lora"), "scaled", dt),
+        "q_norm": norm_specs(m.q_lora_rank, "rmsnorm", dt),
+        "wq_b": ParamSpec(
+            (m.q_lora_rank, h, qk_dim), ("q_lora", "heads", "head_dim"), "scaled", dt
+        ),
+        "wkv_a": ParamSpec(
+            (d, m.kv_lora_rank + m.qk_rope_head_dim), ("embed", "kv_lora"), "scaled", dt
+        ),
+        "kv_norm": norm_specs(m.kv_lora_rank, "rmsnorm", dt),
+        "wkv_b": ParamSpec(
+            (m.kv_lora_rank, h, m.qk_nope_head_dim + m.v_head_dim),
+            ("kv_lora", "heads", "head_dim"),
+            "scaled",
+            dt,
+        ),
+        "wo": ParamSpec((h, m.v_head_dim, d), ("heads", "head_dim", "embed"), "scaled", dt),
+    }
+
+
+def _mla_qkv(params: Dict, x: jax.Array, cfg: ModelConfig, positions: jax.Array):
+    m: MLAConfig = cfg.mla
+    # Query path.
+    q_lat = norm_apply(params["q_norm"], jnp.einsum("bsd,dr->bsr", x, params["wq_a"]), "rmsnorm")
+    q = jnp.einsum("bsr,rhk->bshk", q_lat, params["wq_b"])
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    # Latent KV path.
+    ckv_full = jnp.einsum("bsd,dr->bsr", x, params["wkv_a"])
+    ckv, k_rope = jnp.split(ckv_full, [m.kv_lora_rank], axis=-1)
+    ckv = norm_apply(params["kv_norm"], ckv, "rmsnorm")
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)  # (B,S,1,r)
+    return q_nope, q_rope, ckv, k_rope
+
+
+def _mla_expand_kv(params: Dict, ckv: jax.Array, cfg: ModelConfig):
+    m: MLAConfig = cfg.mla
+    kv = jnp.einsum("bsr,rhk->bshk", ckv, params["wkv_b"])
+    k_nope, v = jnp.split(kv, [m.qk_nope_head_dim], axis=-1)
+    return k_nope, v
+
+
+def mla_apply(
+    params: Dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    positions: jax.Array,
+    cache: Optional[Dict] = None,
+    cache_index: Optional[jax.Array] = None,
+    absorb: bool = False,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    """MLA attention. ``absorb=True`` runs decode in latent space (the
+    W_UK/W_UV absorption trick) — a §Perf optimization, baseline expands."""
+    m: MLAConfig = cfg.mla
+    q_nope, q_rope, ckv, k_rope = _mla_qkv(params, x, cfg, positions)
+    B = x.shape[0]
+
+    if cache is None:
+        k_nope, v = _mla_expand_kv(params, ckv, cfg)
+        H = cfg.n_heads
+        k_rope_b = jnp.broadcast_to(k_rope, (*k_rope.shape[:2], H, m.qk_rope_head_dim))
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k_full = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+        out = mea_attention(q_full, k_full, v, causal=True, chunk=cfg.attn_chunk)
+        y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+        return y, None
+
+    # Decode: cache holds the LATENT stream (B, S, r_kv) + rope keys.
+    idx = cache_index
+    c_ckv = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv, idx, axis=1)
+    c_rope = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], k_rope[:, :, 0, :], idx, axis=1
+    )
+    new_cache = {"ckv": c_ckv, "k_rope": c_rope}
+    S = c_ckv.shape[1]
+    length = idx + 1
+    pos_mask = jnp.arange(S)[None, :] < length
+
+    if absorb:
+        # q_nope absorbed through W_UK: scores in latent space, rank r_kv.
+        wkv_b = params["wkv_b"]  # (r, H, nope+v)
+        w_uk = wkv_b[:, :, : m.qk_nope_head_dim]      # (r, H, nope)
+        w_uv = wkv_b[:, :, m.qk_nope_head_dim:]       # (r, H, v)
+        q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, w_uk)  # (B,1,H,r)
+        scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+        s = (
+            jnp.einsum("bshr,btr->bhst", q_lat.astype(jnp.float32), c_ckv.astype(jnp.float32))
+            + jnp.einsum("bshk,btk->bhst", q_rope.astype(jnp.float32), c_rope.astype(jnp.float32))
+        ) * scale
+        s = jnp.where(pos_mask[:, None, None, :], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o_lat = jnp.einsum("bhst,btr->bshr", p, c_ckv.astype(jnp.float32))
+        out = jnp.einsum("bshr,rhk->bshk", o_lat.astype(x.dtype), w_uv)
+    else:
+        # Baseline: expand the whole latent cache to per-head K/V each step.
+        k_nope, v = _mla_expand_kv(params, c_ckv, cfg)
+        H = cfg.n_heads
+        k_rope_b = jnp.broadcast_to(
+            c_rope[:, :, None, :], (B, S, H, m.qk_rope_head_dim)
+        )
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k_full = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+        scale = 1.0 / math.sqrt(q_full.shape[-1])
+        s = jnp.einsum(
+            "bshk,bthk->bhst", (q_full * scale).astype(jnp.float32), k_full.astype(jnp.float32)
+        )
+        s = jnp.where(pos_mask[:, None, None, :], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bhst,bthk->bshk", p, v.astype(jnp.float32)).astype(x.dtype)
+
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, new_cache
+
+
+def mla_cache_spec(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, ParamSpec]:
+    m: MLAConfig = cfg.mla
+    return {
+        "ckv": ParamSpec(
+            (batch, max_len, m.kv_lora_rank),
+            ("act_batch", "act_kv_seq", None),
+            "zeros",
+            cfg.dtype,
+        ),
+        "k_rope": ParamSpec(
+            (batch, max_len, m.qk_rope_head_dim),
+            ("act_batch", "act_kv_seq", None),
+            "zeros",
+            cfg.dtype,
+        ),
+    }

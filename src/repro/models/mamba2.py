@@ -1,0 +1,279 @@
+"""Mamba2 (SSD) block: chunked state-space duality scan + decode recurrence.
+
+Shapes follow the Mamba2 reference: d_inner = expand * d_model heads of
+size P = head_dim, H = d_inner / P heads, G groups sharing B/C projections
+(GQA-analogue), state size N = d_state.
+
+Three paths:
+  * ``ssd_chunked``   — training/prefill: O(S * chunk) per-position work
+                        (within-chunk quadratic + inter-chunk recurrence),
+                        this is the jnp oracle for the Pallas ssd kernel;
+  * ``ssd_recurrent`` — step-by-step reference (tests) and decode;
+  * ``mamba2_decode`` — single-token decode against carried (conv, ssm)
+                        state — the long_500k serving path (state is O(1)
+                        in sequence length: the whole point of SSM decode).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from .layers import ParamSpec, norm_specs, rms_norm
+
+__all__ = [
+    "mamba2_specs",
+    "mamba2_apply",
+    "mamba2_decode",
+    "mamba2_state_spec",
+    "ssd_chunked",
+    "ssd_recurrent",
+]
+
+
+def _dims(cfg: ModelConfig) -> Tuple[int, int, int, int, int]:
+    ssm: SSMConfig = cfg.ssm
+    d_inner = ssm.expand * cfg.d_model
+    H = d_inner // ssm.head_dim
+    return d_inner, H, ssm.head_dim, ssm.n_groups, ssm.d_state
+
+
+def mamba2_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    ssm: SSMConfig = cfg.ssm
+    d = cfg.d_model
+    d_inner, H, P, G, N = _dims(cfg)
+    dt = cfg.dtype
+    conv_dim = d_inner + 2 * G * N
+    return {
+        # order: [z, x, B, C, dt]
+        "w_in": ParamSpec(
+            (d, 2 * d_inner + 2 * G * N + H), ("embed", "ssm_inner"), "scaled", dt
+        ),
+        "conv_w": ParamSpec((ssm.d_conv, conv_dim), (None, "ssm_inner"), "scaled", dt),
+        "conv_b": ParamSpec((conv_dim,), ("ssm_inner",), "zeros", dt),
+        "a_log": ParamSpec((H,), ("ssm_heads",), "ones", "float32"),
+        "dt_bias": ParamSpec((H,), ("ssm_heads",), "zeros", "float32"),
+        "d_skip": ParamSpec((H,), ("ssm_heads",), "ones", "float32"),
+        "norm": norm_specs(d_inner, "rmsnorm", dt),
+        "w_out": ParamSpec((d_inner, d), ("ssm_inner", "embed"), "scaled", dt),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None):
+    """Depthwise causal conv along time. x: (B,S,D), w: (W,D).
+
+    Returns (y, new_state) where state caches the last W-1 inputs.
+    """
+    W = w.shape[0]
+    if state is None:
+        x_pad = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    else:
+        x_pad = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    new_state = x_pad[:, -(W - 1):, :] if W > 1 else None
+    windows = [x_pad[:, i : i + x.shape[1], :] for i in range(W)]
+    y = sum(wi * w[i] for i, wi in enumerate(windows)) + b
+    return jax.nn.silu(y), new_state
+
+
+def _split_proj(cfg: ModelConfig, proj: jax.Array):
+    d_inner, H, P, G, N = _dims(cfg)
+    z, xbc_dt = jnp.split(proj, [d_inner], axis=-1)
+    xbc, dt = jnp.split(xbc_dt, [d_inner + 2 * G * N], axis=-1)
+    return z, xbc, dt
+
+
+def _split_xbc(cfg: ModelConfig, xbc: jax.Array):
+    d_inner, H, P, G, N = _dims(cfg)
+    x, B, C = jnp.split(xbc, [d_inner, d_inner + G * N], axis=-1)
+    Bsz, S = x.shape[0], x.shape[1]
+    return (
+        x.reshape(Bsz, S, H, P),
+        B.reshape(Bsz, S, G, N),
+        C.reshape(Bsz, S, G, N),
+    )
+
+
+# ---------------------------------------------------------------------------
+# SSD scans
+# ---------------------------------------------------------------------------
+
+def ssd_recurrent(
+    x: jax.Array,      # (B, S, H, P)  (dt already folded in by caller? no: raw)
+    dt: jax.Array,     # (B, S, H) positive
+    A: jax.Array,      # (H,) negative
+    Bm: jax.Array,     # (B, S, G, N)
+    Cm: jax.Array,     # (B, S, G, N)
+    state: Optional[jax.Array] = None,  # (B, H, P, N)
+):
+    """Step-by-step SSM: s_t = exp(dt*A) s_{t-1} + dt * B_t x_t ; y = C_t s_t."""
+    Bsz, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    hg = H // G
+    if state is None:
+        state = jnp.zeros((Bsz, H, P, N), jnp.float32)
+
+    def step(s, inp):
+        xt, dtt, bt, ct = inp  # (B,H,P), (B,H), (B,G,N), (B,G,N)
+        decay = jnp.exp(dtt.astype(jnp.float32) * A)[..., None, None]  # (B,H,1,1)
+        bt_h = jnp.repeat(bt, hg, axis=1).astype(jnp.float32)          # (B,H,N)
+        ct_h = jnp.repeat(ct, hg, axis=1).astype(jnp.float32)
+        upd = (dtt.astype(jnp.float32)[..., None, None]
+               * xt.astype(jnp.float32)[..., None] * bt_h[:, :, None, :])
+        s = decay * s + upd
+        y = jnp.einsum("bhpn,bhn->bhp", s, ct_h)
+        return s, y
+
+    xs = (
+        jnp.moveaxis(x, 1, 0),
+        jnp.moveaxis(dt, 1, 0),
+        jnp.moveaxis(Bm, 1, 0),
+        jnp.moveaxis(Cm, 1, 0),
+    )
+    state, ys = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), state
+
+
+def ssd_chunked(
+    x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array, Cm: jax.Array,
+    *,
+    chunk: int,
+    state: Optional[jax.Array] = None,
+):
+    """Chunked SSD (Mamba2 alg.): quadratic within chunks, scan across."""
+    Bsz, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    hg = H // G
+    Q = min(chunk, S)
+    n_chunks = math.ceil(S / Q)
+    pad = n_chunks * Q - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    f32 = jnp.float32
+    xc = x.reshape(Bsz, n_chunks, Q, H, P).astype(f32)
+    dtc = dt.reshape(Bsz, n_chunks, Q, H).astype(f32)
+    Bc = jnp.repeat(Bm.reshape(Bsz, n_chunks, Q, G, N), hg, axis=3).astype(f32)
+    Cc = jnp.repeat(Cm.reshape(Bsz, n_chunks, Q, G, N), hg, axis=3).astype(f32)
+
+    a = dtc * A  # (B, nc, Q, H) negative increments
+    a_cum = jnp.cumsum(a, axis=2)
+    a_total = a_cum[:, :, -1, :]  # (B, nc, H)
+
+    # Within-chunk (causal, decay-weighted) attention-like term.
+    seg = a_cum[:, :, :, None, :] - a_cum[:, :, None, :, :]  # (B,nc,Q_i,Q_j,H)
+    idx = jnp.arange(Q)
+    causal = idx[:, None] >= idx[None, :]
+    L = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    scores = jnp.einsum("bcihn,bcjhn->bcijh", Cc, Bc)
+    y_intra = jnp.einsum("bcijh,bcijh,bcjh,bcjhp->bcihp", scores, L, dtc, xc)
+
+    # Per-chunk state contribution: sum_j exp(a_total - a_cum_j) dt_j B_j x_j.
+    w = jnp.exp(a_total[:, :, None, :] - a_cum) * dtc        # (B,nc,Q,H)
+    chunk_states = jnp.einsum("bcjh,bcjhn,bcjhp->bchpn", w, Bc, xc)
+
+    # Inter-chunk recurrence over chunk states.
+    if state is None:
+        s0 = jnp.zeros((Bsz, H, P, N), f32)
+    else:
+        s0 = state.astype(f32)
+
+    def scan_fn(s, inp):
+        cs, at = inp  # (B,H,P,N), (B,H)
+        s_out = s                                  # state entering this chunk
+        s = jnp.exp(at)[..., None, None] * s + cs
+        return s, s_out
+
+    final_state, s_in = jax.lax.scan(
+        scan_fn,
+        s0,
+        (jnp.moveaxis(chunk_states, 1, 0), jnp.moveaxis(a_total, 1, 0)),
+    )
+    s_in = jnp.moveaxis(s_in, 0, 1)  # (B, nc, H, P, N)
+
+    # Inter-chunk output: y_i += C_i exp(a_cum_i) s_in.
+    y_inter = jnp.einsum(
+        "bcihn,bcih,bchpn->bcihp", Cc, jnp.exp(a_cum), s_in
+    )
+
+    y = (y_intra + y_inter).reshape(Bsz, n_chunks * Q, H, P)
+    if pad:
+        y = y[:, :S]
+    return y.astype(x.dtype), final_state
+
+
+# ---------------------------------------------------------------------------
+# Block-level apply
+# ---------------------------------------------------------------------------
+
+def mamba2_apply(
+    params: Dict, x: jax.Array, cfg: ModelConfig, *, use_chunked: bool = True
+) -> jax.Array:
+    """Training/prefill forward of one Mamba2 block (no state carried in)."""
+    ssm: SSMConfig = cfg.ssm
+    proj = jnp.einsum("bsd,de->bse", x, params["w_in"])
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+    xbc, _ = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+    xh, Bm, Cm = _split_xbc(cfg, xbc)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["a_log"])
+    runner = ssd_chunked if use_chunked else ssd_recurrent
+    if use_chunked:
+        y, _ = ssd_chunked(xh, dt, A, Bm, Cm, chunk=ssm.chunk)
+    else:
+        y, _ = ssd_recurrent(xh, dt, A, Bm, Cm)
+    y = y + params["d_skip"].astype(y.dtype)[:, None] * xh
+    Bsz, S = x.shape[0], x.shape[1]
+    y = y.reshape(Bsz, S, -1)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"]["scale"])
+    return jnp.einsum("bse,ed->bsd", y, params["w_out"])
+
+
+def mamba2_decode(
+    params: Dict,
+    x: jax.Array,                   # (B, 1, D)
+    cfg: ModelConfig,
+    state: Dict[str, jax.Array],    # {"conv": (B, W-1, conv_dim), "ssm": (B,H,P,N)}
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    proj = jnp.einsum("bsd,de->bse", x, params["w_in"])
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+    xbc, conv_state = _causal_conv(
+        xbc, params["conv_w"], params["conv_b"], state=state["conv"]
+    )
+    xh, Bm, Cm = _split_xbc(cfg, xbc)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["a_log"])
+    y, ssm_state = ssd_recurrent(xh, dt, A, Bm, Cm, state=state["ssm"])
+    y = y + params["d_skip"].astype(y.dtype)[:, None] * xh
+    Bsz = x.shape[0]
+    y = y.reshape(Bsz, 1, -1)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"]["scale"])
+    out = jnp.einsum("bse,ed->bsd", y, params["w_out"])
+    return out, {"conv": conv_state, "ssm": ssm_state}
+
+
+def mamba2_state_spec(cfg: ModelConfig, batch: int) -> Dict[str, ParamSpec]:
+    ssm: SSMConfig = cfg.ssm
+    d_inner, H, P, G, N = _dims(cfg)
+    conv_dim = d_inner + 2 * G * N
+    return {
+        "conv": ParamSpec(
+            (batch, ssm.d_conv - 1, conv_dim),
+            ("act_batch", None, "ssm_inner"),
+            "zeros",
+            cfg.dtype,
+        ),
+        "ssm": ParamSpec(
+            (batch, H, P, N),
+            ("act_batch", "ssm_heads", None, None),
+            "zeros",
+            "float32",
+        ),
+    }

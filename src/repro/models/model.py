@@ -1,0 +1,337 @@
+"""Top-level model: embeddings, stacks, losses, prefill/decode entry points.
+
+``build_model(cfg)`` returns a ``Model`` whose methods are pure functions
+of (params, inputs) — ready for jax.jit/pjit with shardings attached by
+the launch layer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import constrain_batch
+from . import attention as attn
+from . import mamba2, moe, xlstm, zamba
+from .layers import (
+    ParamSpec,
+    abstract_from_specs,
+    count_specs,
+    init_from_specs,
+    mlp_apply,
+    norm_apply,
+    norm_specs,
+)
+from .transformer import Segment, block_apply, run_segments, segment_plan, stack_specs
+
+__all__ = ["Model", "build_model", "count_params_analytic"]
+
+
+# ---------------------------------------------------------------------------
+# Per-kind decode-step functions (single token, cache threading)
+# ---------------------------------------------------------------------------
+
+def _block_decode(
+    params: Dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    kind: str,
+    *,
+    positions: jax.Array,
+    cache: Dict,
+    cache_index: jax.Array,
+) -> Tuple[jax.Array, Dict]:
+    if kind in ("dense", "parallel", "moe"):
+        h = norm_apply(params["attn_norm"], x, cfg.norm)
+        a, new_cache = attn.gqa_apply(
+            params["attn"], h, cfg, positions=positions,
+            cache=cache, cache_index=cache_index,
+        )
+        if kind == "parallel":
+            f = mlp_apply(params["ffn"], h, cfg.act, cfg.glu)
+            return x + a + f, new_cache
+        x = x + a
+        h = norm_apply(params["mlp_norm"], x, cfg.norm)
+        if kind == "moe":
+            f, _ = moe.moe_apply(params["ffn"], h, cfg)
+        else:
+            f = mlp_apply(params["ffn"], h, cfg.act, cfg.glu)
+        return x + f, new_cache
+    if kind in ("mla_dense", "mla_moe"):
+        h = norm_apply(params["attn_norm"], x, cfg.norm)
+        a, new_cache = attn.mla_apply(
+            params["attn"], h, cfg, positions=positions,
+            cache=cache, cache_index=cache_index, absorb=cfg.mla_absorb,
+        )
+        x = x + a
+        h = norm_apply(params["mlp_norm"], x, cfg.norm)
+        if kind == "mla_moe":
+            f, _ = moe.moe_apply(params["ffn"], h, cfg)
+        else:
+            f = mlp_apply(params["ffn"], h, cfg.act, cfg.glu)
+        return x + f, new_cache
+    if kind == "mlstm":
+        h = norm_apply(params["norm"], x, cfg.norm)
+        y, new_state = xlstm.mlstm_decode(params["mixer"], h, cfg, cache)
+        return x + y, new_state
+    if kind == "slstm":
+        h = norm_apply(params["norm"], x, cfg.norm)
+        y, new_state = xlstm.slstm_apply(params["mixer"], h, cfg, state=cache)
+        return x + y, new_state
+    raise ValueError(f"no decode for block kind {kind}")
+
+
+def _block_cache_specs(
+    cfg: ModelConfig, kind: str, batch: int, max_len: int
+) -> Optional[Dict]:
+    if kind in ("dense", "parallel", "moe"):
+        return attn.gqa_cache_spec(cfg, batch, max_len)
+    if kind in ("mla_dense", "mla_moe"):
+        return attn.mla_cache_spec(cfg, batch, max_len)
+    if kind == "mlstm":
+        return xlstm.mlstm_state_spec(cfg, batch)
+    if kind == "slstm":
+        return xlstm.slstm_state_spec(cfg, batch)
+    if kind == "encoder":
+        return None
+    raise ValueError(f"no cache spec for {kind}")
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # -- specs ---------------------------------------------------------------
+    @functools.cached_property
+    def segments(self) -> List[Segment]:
+        if self.cfg.family in ("ssm", "hybrid"):
+            return []  # zamba path
+        return segment_plan(self.cfg)
+
+    def param_specs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        dt = cfg.dtype
+        specs: Dict[str, Any] = {}
+        if cfg.input_kind == "tokens":
+            specs["embed"] = ParamSpec(
+                (cfg.vocab_size, cfg.d_model), ("vocab", "embed"), "normal", dt
+            )
+        else:  # frames (audio stub): projection + depthwise positional conv
+            specs["frame_proj"] = ParamSpec(
+                (cfg.d_model, cfg.d_model), ("embed", "embed_out"), "scaled", dt
+            )
+            specs["pos_conv_w"] = ParamSpec((16, cfg.d_model), (None, "embed"), "scaled", dt)
+            specs["pos_conv_b"] = ParamSpec((cfg.d_model,), ("embed",), "zeros", dt)
+            specs["embed"] = ParamSpec(  # output head for masked prediction
+                (cfg.vocab_size, cfg.d_model), ("vocab", "embed"), "normal", dt
+            )
+        if cfg.family in ("ssm", "hybrid"):
+            specs["stack"] = zamba.zamba_specs(cfg)
+        else:
+            specs["stack"] = [stack_specs(cfg, seg) for seg in self.segments]
+        specs["final_norm"] = norm_specs(cfg.d_model, cfg.norm, dt)
+        if not cfg.tie_embeddings:
+            specs["head"] = ParamSpec(
+                (cfg.d_model, cfg.vocab_size), ("embed", "vocab"), "scaled", dt
+            )
+        if cfg.mtp:
+            specs["mtp"] = {
+                "proj": ParamSpec(
+                    (2 * cfg.d_model, cfg.d_model), ("embed", "embed_out"), "scaled", dt
+                ),
+                "block": stack_specs(cfg, Segment(self._mtp_kind(), 1)),
+                "norm": norm_specs(cfg.d_model, cfg.norm, dt),
+            }
+        return specs
+
+    def _mtp_kind(self) -> str:
+        return "mla_dense" if self.cfg.mla is not None else "dense"
+
+    def init(self, rng: jax.Array, dtype_override: Optional[str] = None):
+        return init_from_specs(rng, self.param_specs(), dtype_override)
+
+    def abstract_params(self, sharding_for):
+        return abstract_from_specs(self.param_specs(), sharding_for)
+
+    # -- forward -------------------------------------------------------------
+    def embed_inputs(self, params: Dict, inputs: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        if cfg.input_kind == "tokens":
+            return params["embed"][inputs]
+        x = jnp.einsum("bsd,de->bse", inputs.astype(params["frame_proj"].dtype),
+                       params["frame_proj"])
+        # Depthwise positional conv (HuBERT-style stub).
+        W = params["pos_conv_w"].shape[0]
+        x_pad = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+        pos = sum(
+            x_pad[:, i : i + x.shape[1], :] * params["pos_conv_w"][i] for i in range(W)
+        ) + params["pos_conv_b"]
+        return x + pos
+
+    def hidden(
+        self, params: Dict, inputs: jax.Array, positions: jax.Array
+    ) -> Tuple[jax.Array, jax.Array]:
+        cfg = self.cfg
+        x = constrain_batch(self.embed_inputs(params, inputs))
+        if cfg.family in ("ssm", "hybrid"):
+            h, aux = zamba.zamba_apply(params["stack"], x, cfg, positions=positions)
+        else:
+            h, aux = run_segments(
+                params["stack"], self.segments, x, cfg, positions=positions
+            )
+        return norm_apply(params["final_norm"], h, cfg.norm), aux
+
+    def logits(self, params: Dict, h: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        if cfg.tie_embeddings or cfg.input_kind != "tokens":
+            out = jnp.einsum("bsd,vd->bsv", h, params["embed"])
+        else:
+            out = jnp.einsum("bsd,dv->bsv", h, params["head"])
+        if cfg.logit_scale != 1.0:
+            out = out * cfg.logit_scale
+        if cfg.logit_softcap > 0:
+            out = cfg.logit_softcap * jnp.tanh(out / cfg.logit_softcap)
+        return out
+
+    # -- training ------------------------------------------------------------
+    def train_loss(
+        self, params: Dict, batch: Dict[str, jax.Array]
+    ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        """batch: inputs (B,S) int32 or (B,S,D) frames, labels (B,S) int32,
+        optional mask (B,S)."""
+        cfg = self.cfg
+        inputs, labels = batch["inputs"], batch["labels"]
+        S = labels.shape[1]
+        positions = jnp.arange(S)
+        h, aux = self.hidden(params, inputs, positions)
+        logits = self.logits(params, h)
+        mask = batch.get("mask")
+        if mask is None:
+            mask = jnp.ones(labels.shape, jnp.float32)
+        ce = _masked_ce(logits, labels, mask)
+        loss = ce + cfg.moe.router_aux_weight * aux if cfg.moe else ce
+        metrics = {"ce": ce, "aux": aux}
+        if cfg.mtp:
+            mtp_loss = self._mtp_loss(params, h, inputs, labels, mask, positions)
+            loss = loss + 0.3 * mtp_loss
+            metrics["mtp"] = mtp_loss
+        metrics["loss"] = loss
+        return loss, metrics
+
+    def _mtp_loss(self, params, h, inputs, labels, mask, positions):
+        """DeepSeek-V3 multi-token prediction: one extra block predicts t+2."""
+        cfg = self.cfg
+        emb_next = params["embed"][jnp.roll(inputs, -1, axis=1)]
+        x = jnp.einsum(
+            "bsd,de->bse",
+            jnp.concatenate([h, emb_next], axis=-1),
+            params["mtp"]["proj"],
+        )
+        x, _ = block_apply(
+            params["mtp"]["block"], x, cfg, self._mtp_kind(), positions=positions
+        )
+        x = norm_apply(params["mtp"]["norm"], x, cfg.norm)
+        logits2 = self.logits(params, x)
+        labels2 = jnp.roll(labels, -1, axis=1)
+        mask2 = mask * (jnp.arange(labels.shape[1]) < labels.shape[1] - 1)
+        return _masked_ce(logits2, labels2, mask2)
+
+    # -- serving ---------------------------------------------------------------
+    def cache_specs(self, batch: int, max_len: int):
+        cfg = self.cfg
+        if cfg.family in ("ssm", "hybrid"):
+            return zamba.zamba_cache_specs(cfg, batch, max_len)
+        out = []
+        for seg in self.segments:
+            single = _block_cache_specs(cfg, seg.kind, batch, max_len)
+            if seg.count > 1:
+                single = jax.tree.map(
+                    lambda s: ParamSpec(
+                        (seg.count, *s.shape), ("layers", *s.axes), s.init, s.dtype
+                    ),
+                    single,
+                    is_leaf=lambda x: isinstance(x, ParamSpec),
+                )
+            out.append(single)
+        return out
+
+    def prefill(self, params: Dict, inputs: jax.Array) -> jax.Array:
+        """Prefill forward -> logits for the last position (cache writing is
+        fused into decode for simplicity of the serving API; the dry-run
+        lowers this as the prefill compute)."""
+        S = inputs.shape[1]
+        positions = jnp.arange(S)
+        h, _ = self.hidden(params, inputs, positions)
+        return self.logits(params, h[:, -1:, :])
+
+    def decode_step(
+        self,
+        params: Dict,
+        token: jax.Array,          # (B, 1) int32
+        caches,
+        cache_index: jax.Array,    # scalar int32: current length
+    ):
+        cfg = self.cfg
+        x = params["embed"][token]
+        positions = jnp.full((token.shape[0], 1), cache_index, jnp.int32)[0]
+        if cfg.family in ("ssm", "hybrid"):
+            h, new_caches = zamba.zamba_decode(
+                params["stack"], x, cfg, caches,
+                positions=positions, cache_index=cache_index,
+            )
+        else:
+            new_caches = []
+            h = x
+            for seg_params, seg_cache, seg in zip(params["stack"], caches, self.segments):
+                if seg.count == 1:
+                    h, nc = _block_decode(
+                        seg_params, h, cfg, seg.kind,
+                        positions=positions, cache=seg_cache, cache_index=cache_index,
+                    )
+                else:
+                    def scan_fn(carry, xs):
+                        layer, cache = xs
+                        h2, nc = _block_decode(
+                            layer, carry, cfg, seg.kind,
+                            positions=positions, cache=cache, cache_index=cache_index,
+                        )
+                        return h2, nc
+                    h, nc = jax.lax.scan(scan_fn, h, (seg_params, seg_cache))
+                new_caches.append(nc)
+        h = norm_apply(params["final_norm"], h, cfg.norm)
+        return self.logits(params, h), new_caches
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)
+
+
+def count_params_analytic(cfg: ModelConfig, active_only: bool = False) -> int:
+    """Parameter count from the spec tree (exact). active_only: count each
+    MoE layer as top_k (+shared) experts instead of all experts."""
+    model = build_model(cfg)
+    total = count_specs(model.param_specs())
+    if active_only and cfg.moe is not None:
+        d, de = cfg.d_model, cfg.moe.d_expert
+        per_expert = 3 * d * de
+        n_moe_layers = cfg.n_layers - cfg.moe.first_k_dense
+        total -= (cfg.moe.n_experts - cfg.moe.top_k) * per_expert * n_moe_layers
+    return total
+
+
+def _masked_ce(logits: jax.Array, labels: jax.Array, mask: jax.Array) -> jax.Array:
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(
+        logits.astype(jnp.float32), labels[..., None], axis=-1
+    )[..., 0]
+    nll = (lse - gold) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1.0)

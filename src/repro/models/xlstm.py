@@ -1,0 +1,263 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+mLSTM trains with the stabilized parallel (quadratic) form and decodes
+with the O(1) recurrent form; sLSTM is inherently recurrent (hidden-to-
+hidden connections) and always scans over time. Both follow the xLSTM
+paper's pre-/post-up-projection block wiring.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, XLSTMConfig
+from .layers import ParamSpec, norm_specs, rms_norm
+
+__all__ = [
+    "mlstm_specs", "mlstm_apply", "mlstm_decode", "mlstm_state_spec",
+    "slstm_specs", "slstm_apply", "slstm_state_spec",
+    "mlstm_parallel", "mlstm_recurrent",
+]
+
+NEG_INF = -1e30
+
+
+def _mlstm_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    xc: XLSTMConfig = cfg.xlstm
+    d_in = int(cfg.d_model * xc.mlstm_proj_factor)
+    H = cfg.n_heads
+    return d_in, H, d_in // H
+
+
+# ---------------------------------------------------------------------------
+# mLSTM core math
+# ---------------------------------------------------------------------------
+
+def mlstm_parallel(
+    q: jax.Array,  # (B, S, H, D)
+    k: jax.Array,
+    v: jax.Array,
+    i_pre: jax.Array,  # (B, S, H) input-gate preactivation
+    f_pre: jax.Array,  # (B, S, H) forget-gate preactivation
+) -> jax.Array:
+    """Stabilized parallel form (xLSTM paper eq. 19-27)."""
+    B, S, H, D = q.shape
+    f32 = jnp.float32
+    log_f = jax.nn.log_sigmoid(f_pre.astype(f32))         # (B,S,H)
+    F = jnp.cumsum(log_f, axis=1)
+    # Dtilde[t, s] = F_t - F_s + i_s   (s <= t)
+    dmat = F[:, :, None, :] - F[:, None, :, :] + i_pre.astype(f32)[:, None, :, :]
+    idx = jnp.arange(S)
+    causal = idx[:, None] >= idx[None, :]
+    dmat = jnp.where(causal[None, :, :, None], dmat, NEG_INF)
+    m = dmat.max(axis=2)                                   # (B,S,H) row max
+    dexp = jnp.exp(dmat - m[:, :, None, :])
+    scale = 1.0 / math.sqrt(D)
+    scores = jnp.einsum("bthd,bshd->btsh", q.astype(f32) * scale, k.astype(f32))
+    w = scores * dexp
+    norm = jnp.maximum(jnp.abs(w.sum(axis=2)), jnp.exp(-m))  # (B,S,H)
+    h = jnp.einsum("btsh,bshd->bthd", w, v.astype(f32)) / norm[..., None]
+    return h.astype(q.dtype)
+
+
+def mlstm_recurrent(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    i_pre: jax.Array, f_pre: jax.Array,
+    state: Tuple[jax.Array, jax.Array, jax.Array],  # C (B,H,D,D), n (B,H,D), m (B,H)
+):
+    """Recurrent stepping over a (possibly length-1) sequence."""
+    B, S, H, D = q.shape
+    f32 = jnp.float32
+    scale = 1.0 / math.sqrt(D)
+
+    def step(carry, inp):
+        C, n, m = carry
+        qt, kt, vt, it, ft = inp
+        log_f = jax.nn.log_sigmoid(ft.astype(f32))         # (B,H)
+        m_new = jnp.maximum(log_f + m, it.astype(f32))
+        f_act = jnp.exp(log_f + m - m_new)[..., None]
+        i_act = jnp.exp(it.astype(f32) - m_new)[..., None]
+        kf = kt.astype(f32) * scale
+        C = f_act[..., None] * C + i_act[..., None] * (
+            kf[..., :, None] * vt.astype(f32)[..., None, :]
+        )
+        n = f_act * n + i_act * kf
+        qf = qt.astype(f32)
+        num = jnp.einsum("bhd,bhde->bhe", qf, C)
+        den = jnp.maximum(
+            jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n)), jnp.exp(-m_new)
+        )
+        h = num / den[..., None]
+        return (C, n, m_new), h
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (q, k, v, i_pre, f_pre))
+    (C, n, m), hs = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(hs, 0, 1).astype(q.dtype), (C, n, m)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block
+# ---------------------------------------------------------------------------
+
+def mlstm_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    xc: XLSTMConfig = cfg.xlstm
+    d = cfg.d_model
+    d_in, H, Dh = _mlstm_dims(cfg)
+    dt = cfg.dtype
+    return {
+        "w_up": ParamSpec((d, 2 * d_in), ("embed", "ffn"), "scaled", dt),
+        "conv_w": ParamSpec((xc.conv1d_kernel, d_in), (None, "ffn"), "scaled", dt),
+        "conv_b": ParamSpec((d_in,), ("ffn",), "zeros", dt),
+        "wq": ParamSpec((d_in, d_in), ("ffn", "ffn_out"), "scaled", dt),
+        "wk": ParamSpec((d_in, d_in), ("ffn", "ffn_out"), "scaled", dt),
+        "wv": ParamSpec((d_in, d_in), ("ffn", "ffn_out"), "scaled", dt),
+        "w_if": ParamSpec((d_in, 2 * H), ("ffn", None), "scaled", dt),
+        "b_if": ParamSpec((2 * H,), (None,), "zeros", "float32"),
+        "norm": norm_specs(d_in, "rmsnorm", dt),
+        "w_down": ParamSpec((d_in, d), ("ffn", "embed"), "scaled", dt),
+    }
+
+
+def _mlstm_qkvif(params: Dict, x: jax.Array, cfg: ModelConfig,
+                 conv_state: Optional[jax.Array] = None):
+    from .mamba2 import _causal_conv  # shared depthwise causal conv helper
+
+    d_in, H, Dh = _mlstm_dims(cfg)
+    up = jnp.einsum("bsd,de->bse", x, params["w_up"])
+    xm, z = jnp.split(up, 2, axis=-1)
+    xc, new_conv = _causal_conv(xm, params["conv_w"], params["conv_b"], state=conv_state)
+    B, S = x.shape[0], x.shape[1]
+    q = jnp.einsum("bse,ef->bsf", xc, params["wq"]).reshape(B, S, H, Dh)
+    k = jnp.einsum("bse,ef->bsf", xc, params["wk"]).reshape(B, S, H, Dh)
+    v = jnp.einsum("bse,ef->bsf", xm, params["wv"]).reshape(B, S, H, Dh)
+    gates = jnp.einsum("bse,eg->bsg", xc, params["w_if"]) + params["b_if"]
+    i_pre, f_pre = jnp.split(gates, 2, axis=-1)
+    return q, k, v, i_pre, f_pre, z, new_conv
+
+
+def mlstm_apply(params: Dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    d_in, H, Dh = _mlstm_dims(cfg)
+    q, k, v, i_pre, f_pre, z, _ = _mlstm_qkvif(params, x, cfg)
+    h = mlstm_parallel(q, k, v, i_pre, f_pre)
+    B, S = x.shape[0], x.shape[1]
+    h = h.reshape(B, S, d_in)
+    h = rms_norm(h, params["norm"]["scale"]) * jax.nn.silu(z)
+    return jnp.einsum("bse,ed->bsd", h, params["w_down"])
+
+
+def mlstm_decode(params: Dict, x: jax.Array, cfg: ModelConfig, state: Dict):
+    d_in, H, Dh = _mlstm_dims(cfg)
+    q, k, v, i_pre, f_pre, z, conv_state = _mlstm_qkvif(
+        params, x, cfg, conv_state=state["conv"]
+    )
+    h, (C, n, m) = mlstm_recurrent(
+        q, k, v, i_pre, f_pre, (state["C"], state["n"], state["m"])
+    )
+    B, S = x.shape[0], x.shape[1]
+    h = h.reshape(B, S, d_in)
+    h = rms_norm(h, params["norm"]["scale"]) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", h, params["w_down"])
+    return out, {"conv": conv_state, "C": C, "n": n, "m": m}
+
+
+def mlstm_state_spec(cfg: ModelConfig, batch: int) -> Dict[str, ParamSpec]:
+    xc: XLSTMConfig = cfg.xlstm
+    d_in, H, Dh = _mlstm_dims(cfg)
+    return {
+        "conv": ParamSpec(
+            (batch, xc.conv1d_kernel - 1, d_in), ("act_batch", None, "ffn"),
+            "zeros", cfg.dtype,
+        ),
+        "C": ParamSpec((batch, H, Dh, Dh), ("act_batch", "heads", None, None),
+                       "zeros", "float32"),
+        "n": ParamSpec((batch, H, Dh), ("act_batch", "heads", None),
+                       "zeros", "float32"),
+        "m": ParamSpec((batch, H), ("act_batch", "heads"), "zeros", "float32"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (recurrent; block-diagonal per-head hidden-to-hidden)
+# ---------------------------------------------------------------------------
+
+def slstm_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    xc: XLSTMConfig = cfg.xlstm
+    d = cfg.d_model
+    H = cfg.n_heads
+    Dh = d // H
+    dt = cfg.dtype
+    d_up = int(d * xc.slstm_proj_factor)
+    return {
+        # gates: z, i, f, o — input projections
+        "w_x": ParamSpec((d, 4 * d), ("embed", "ffn"), "scaled", dt),
+        # recurrent per-head block-diagonal weights (H, Dh, 4*Dh)
+        "w_h": ParamSpec((H, Dh, 4 * Dh), ("heads", None, None), "scaled", dt),
+        "bias": ParamSpec((4 * d,), ("ffn",), "zeros", "float32"),
+        "norm": norm_specs(d, "rmsnorm", dt),
+        # post-block gated MLP (proj factor 4/3)
+        "up_w": ParamSpec((d, 2 * d_up), ("embed", "ffn"), "scaled", dt),
+        "down_w": ParamSpec((d_up, d), ("ffn", "embed"), "scaled", dt),
+    }
+
+
+def slstm_apply(
+    params: Dict, x: jax.Array, cfg: ModelConfig,
+    state: Optional[Dict] = None,
+) -> Tuple[jax.Array, Dict]:
+    B, S, d = x.shape
+    H = cfg.n_heads
+    Dh = d // H
+    f32 = jnp.float32
+
+    x_gates = jnp.einsum("bsd,dg->bsg", x, params["w_x"]).astype(f32) + params["bias"]
+
+    if state is None:
+        state = {
+            "h": jnp.zeros((B, H, Dh), f32),
+            "c": jnp.zeros((B, H, Dh), f32),
+            "n": jnp.ones((B, H, Dh), f32),
+            "m": jnp.zeros((B, H, Dh), f32),
+        }
+
+    w_h = params["w_h"].astype(f32)  # (H, Dh, 4Dh)
+
+    def step(carry, gx):
+        h, c, n, m = carry["h"], carry["c"], carry["n"], carry["m"]
+        rec = jnp.einsum("bhd,hdg->bhg", h, w_h)           # (B,H,4Dh)
+        g = gx.reshape(B, H, 4 * Dh) + rec
+        z_pre, i_pre, f_pre, o_pre = jnp.split(g, 4, axis=-1)
+        z = jnp.tanh(z_pre)
+        o = jax.nn.sigmoid(o_pre)
+        log_f = jax.nn.log_sigmoid(f_pre)
+        m_new = jnp.maximum(log_f + m, i_pre)
+        i_act = jnp.exp(i_pre - m_new)
+        f_act = jnp.exp(log_f + m - m_new)
+        c = f_act * c + i_act * z
+        n = f_act * n + i_act
+        h_new = o * c / jnp.maximum(n, 1e-6)
+        new = {"h": h_new, "c": c, "n": n, "m": m_new}
+        return new, h_new
+
+    state, hs = jax.lax.scan(step, state, jnp.moveaxis(x_gates, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).reshape(B, S, d).astype(x.dtype)
+    y = rms_norm(y, params["norm"]["scale"])
+    up = jnp.einsum("bsd,de->bse", y, params["up_w"])
+    u, g = jnp.split(up, 2, axis=-1)
+    y = jnp.einsum("bse,ed->bsd", u * jax.nn.gelu(g, approximate=True), params["down_w"])
+    return y, state
+
+
+def slstm_state_spec(cfg: ModelConfig, batch: int) -> Dict[str, ParamSpec]:
+    H = cfg.n_heads
+    Dh = cfg.d_model // H
+    ax = ("act_batch", "heads", None)
+    return {
+        "h": ParamSpec((batch, H, Dh), ax, "zeros", "float32"),
+        "c": ParamSpec((batch, H, Dh), ax, "zeros", "float32"),
+        "n": ParamSpec((batch, H, Dh), ax, "ones", "float32"),
+        "m": ParamSpec((batch, H, Dh), ax, "zeros", "float32"),
+    }

@@ -1,0 +1,250 @@
+"""Pure-JAX optimizers (optax is not available offline): SGD, momentum,
+AdamW, Adafactor.
+
+API mirrors optax: ``init(params) -> state``, ``update(grads, state,
+params) -> (updates, state)``; apply with ``apply_updates``. All states
+are pytrees of arrays sharded like their params (the launch layer attaches
+the shardings), so ZeRO-style optimizer-state sharding falls out of the
+param sharding rules for free.
+
+Adafactor is the default for the 671B config: factored second moments cut
+optimizer state from 2x fp32 params to ~(row+col) sums, which is what
+makes the deepseek train cells fit 16 GB/chip at 512 chips (see
+EXPERIMENTS.md §Dry-run).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "Optimizer",
+    "sgd",
+    "momentum",
+    "adamw",
+    "adafactor",
+    "apply_updates",
+    "global_norm",
+    "clip_by_global_norm",
+    "get_optimizer",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], Tuple[Any, Any]]
+    # update(grads, state, params, lr) -> (updates, new_state)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda x: (x * scale).astype(x.dtype), tree), norm
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)).astype(p.dtype),
+                        params, updates)
+
+
+# ---------------------------------------------------------------------------
+
+def sgd() -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params, lr):
+        return jax.tree.map(lambda g: -lr * g.astype(jnp.float32), grads), state
+
+    return Optimizer(init, update)
+
+
+def momentum(mu: float = 0.9, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def update(grads, state, params, lr):
+        new_m = jax.tree.map(
+            lambda m, g: mu * m + g.astype(jnp.float32), state, grads
+        )
+        if nesterov:
+            upd = jax.tree.map(
+                lambda m, g: -lr * (mu * m + g.astype(jnp.float32)), new_m, grads
+            )
+        else:
+            upd = jax.tree.map(lambda m: -lr * m, new_m)
+        return upd, new_m
+
+    return Optimizer(init, update)
+
+
+class _AdamState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def adamw(
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    state_dtype: Any = jnp.float32,
+) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, state_dtype)
+        return _AdamState(
+            step=jnp.zeros((), jnp.int32),
+            m=jax.tree.map(zeros, params),
+            v=jax.tree.map(zeros, params),
+        )
+
+    def update(grads, state, params, lr):
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+
+        def upd_m(m, g):
+            return (b1 * m + (1 - b1) * g.astype(jnp.float32)).astype(state_dtype)
+
+        def upd_v(v, g):
+            gf = g.astype(jnp.float32)
+            return (b2 * v + (1 - b2) * gf * gf).astype(state_dtype)
+
+        new_m = jax.tree.map(upd_m, state.m, grads)
+        new_v = jax.tree.map(upd_v, state.v, grads)
+
+        def step_fn(m, v, p):
+            mh = m.astype(jnp.float32) / c1
+            vh = v.astype(jnp.float32) / c2
+            u = -lr * (mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32))
+            return u
+
+        upd = jax.tree.map(step_fn, new_m, new_v, params)
+        return upd, _AdamState(step=step, m=new_m, v=new_v)
+
+    return Optimizer(init, update)
+
+
+class _FactorState(NamedTuple):
+    step: jax.Array
+    # per-leaf dict: {"row": ..., "col": ...} (factored) or {"v": ...} (full).
+    # Dict keys live in the treedef, not the leaves, so the state is jit-safe.
+    states: Any
+
+
+def adafactor(
+    decay: float = 0.8,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    min_dim_factored: int = 128,
+) -> Optimizer:
+    """Adafactor (Shazeer & Stern) without LR warmup logic (schedules are
+    external). Matrices with both trailing dims >= min_dim_factored use
+    factored second moments; everything else stores a full fp32 v."""
+
+    def _is_factored(p) -> bool:
+        return (
+            p.ndim >= 2
+            and p.shape[-1] >= min_dim_factored
+            and p.shape[-2] >= min_dim_factored
+        )
+
+    def init(params):
+        def one(p):
+            if _is_factored(p):
+                return {
+                    "row": jnp.zeros(p.shape[:-1], jnp.float32),   # reduce last
+                    "col": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return _FactorState(
+            step=jnp.zeros((), jnp.int32),
+            states=jax.tree.map(one, params, is_leaf=lambda x: hasattr(x, "shape")),
+        )
+
+    def update(grads, state, params, lr):
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        beta = 1.0 - t ** (-decay)
+
+        def factored_math(gf, row, col):
+            g2 = gf * gf + eps
+            new_row = beta * row + (1 - beta) * g2.mean(axis=-1)
+            new_col = beta * col + (1 - beta) * g2.mean(axis=-2)
+            row_mean = new_row.mean(axis=-1, keepdims=True)
+            r = new_row / jnp.maximum(row_mean, eps)
+            vhat = r[..., None] * new_col[..., None, :]
+            u = gf / jnp.sqrt(jnp.maximum(vhat, eps))
+            rms = jnp.sqrt(jnp.mean(u * u))
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return u, new_row, new_col
+
+        # Leaves above this many elements (the stacked-layer MoE weights
+        # reach 2e11) are updated per-layer via lax.map so the fp32 temps
+        # are one layer, not the whole stack — without this the optimizer
+        # update transiently allocates several fp32 copies of a ~0.9 TB
+        # tensor's shard and blows the per-device peak.
+        MAP_ELEMS = 2 ** 31
+
+        def one(g, s, p):
+            gf = g.astype(jnp.float32)
+            if "row" in s:
+                if p.size >= MAP_ELEMS and p.ndim >= 3:
+                    # Per-layer slices; emit the stacked update in the
+                    # param dtype so no fp32 copy of the full stack exists.
+                    def _sliced(args):
+                        u_l, r_l, c_l = factored_math(
+                            args[0].astype(jnp.float32), args[1], args[2]
+                        )
+                        return u_l.astype(p.dtype), r_l, c_l
+
+                    u, new_row, new_col = jax.lax.map(
+                        _sliced, (g, s["row"], s["col"])
+                    )
+                else:
+                    u, new_row, new_col = factored_math(gf, s["row"], s["col"])
+                new_s = {"row": new_row, "col": new_col}
+            else:
+                g2 = gf * gf + eps
+                new_v = beta * s["v"] + (1 - beta) * g2
+                u = gf / jnp.sqrt(jnp.maximum(new_v, eps))
+                rms = jnp.sqrt(jnp.mean(u * u))
+                u = u / jnp.maximum(1.0, rms / clip_threshold)
+                new_s = {"v": new_v}
+            return -lr * u, new_s
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_s = treedef.flatten_up_to(state.states)
+        flat_p = treedef.flatten_up_to(params)
+        outs = [one(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        upd = treedef.unflatten([o[0] for o in outs])
+        new_states = treedef.unflatten([o[1] for o in outs])
+        return upd, _FactorState(step=step, states=new_states)
+
+    return Optimizer(init, update)
+
+
+def get_optimizer(name: str, **kw) -> Optimizer:
+    if name == "sgd":
+        return sgd()
+    if name == "momentum":
+        return momentum(**kw)
+    if name == "adamw":
+        return adamw(**kw)
+    if name == "adafactor":
+        return adafactor(**kw)
+    raise ValueError(f"unknown optimizer {name}")

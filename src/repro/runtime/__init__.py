@@ -1,0 +1,11 @@
+from .checkpoint import CheckpointManager
+from .steps import make_decode_step, make_prefill_step, make_train_step
+from .telemetry import StragglerTracker
+
+__all__ = [
+    "CheckpointManager",
+    "make_train_step",
+    "make_prefill_step",
+    "make_decode_step",
+    "StragglerTracker",
+]

@@ -1,0 +1,45 @@
+"""Worker response-time telemetry: EWMA tracking + straggler detection.
+
+The controller consumes raw response times for delay-model fitting; this
+module adds the ops-level view: per-worker EWMAs, relative slowdown
+scores, and persistent-straggler detection used for demotion (a worker
+that is consistently slower than the fleet median by a large factor is
+removed from n — the paper's order statistics then reprice every stage
+decision automatically).
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+__all__ = ["StragglerTracker"]
+
+
+class StragglerTracker:
+    def __init__(self, n_workers: int, alpha: float = 0.1, warmup: int = 16):
+        self.n = n_workers
+        self.alpha = alpha
+        self.warmup = warmup
+        self.ewma = np.zeros(n_workers)
+        self.count = 0
+
+    def observe(self, response_times: np.ndarray, alive: np.ndarray) -> None:
+        z = np.asarray(response_times, dtype=np.float64)
+        finite = np.isfinite(z) & alive
+        if self.count == 0:
+            self.ewma[finite] = z[finite]
+        else:
+            self.ewma[finite] += self.alpha * (z[finite] - self.ewma[finite])
+        self.count += 1
+
+    def slowdown(self) -> np.ndarray:
+        """Per-worker EWMA / fleet median (1.0 = typical)."""
+        med = np.median(self.ewma[self.ewma > 0]) if (self.ewma > 0).any() else 1.0
+        return self.ewma / max(med, 1e-12)
+
+    def persistent_stragglers(self, threshold: float) -> List[int]:
+        if self.count < self.warmup:
+            return []
+        return [int(i) for i in np.nonzero(self.slowdown() > threshold)[0]]

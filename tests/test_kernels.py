@@ -1,0 +1,154 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret mode."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import attention_ref, flash_attention
+from repro.kernels.rmsnorm import rmsnorm, rmsnorm_ref
+from repro.kernels.ssd_scan import ssd_ref, ssd_scan
+
+RNG = np.random.default_rng(7)
+
+
+def _arr(shape, dtype):
+    return jnp.asarray(RNG.normal(size=shape), dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+FLASH_CASES = [
+    # B, Sq, Skv, H, Hkv, D, Dv, causal
+    (2, 128, 128, 4, 2, 64, 64, True),
+    (1, 256, 256, 8, 8, 64, 64, True),     # MHA
+    (1, 200, 200, 4, 1, 64, 64, True),     # MQA, ragged seq (padding path)
+    (2, 128, 128, 4, 2, 128, 128, False),  # bidirectional
+    (1, 64, 64, 2, 2, 32, 32, True),       # small blocks
+    (1, 384, 384, 6, 3, 64, 64, True),     # 3 q blocks
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(case, dtype):
+    B, Sq, Skv, H, Hkv, D, Dv, causal = case
+    q = _arr((B, Sq, H, D), dtype)
+    k = _arr((B, Skv, Hkv, D), dtype)
+    v = _arr((B, Skv, Hkv, Dv), dtype)
+    out = flash_attention(q, k, v, causal=causal, block_q=128, block_kv=128,
+                          interpret=True)
+    ref = attention_ref(q, k, v, causal=causal)
+    tol = 6e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=tol
+    )
+
+
+def test_flash_attention_block_size_invariance():
+    q = _arr((1, 256, 4, 64), jnp.float32)
+    k = _arr((1, 256, 2, 64), jnp.float32)
+    v = _arr((1, 256, 2, 64), jnp.float32)
+    a = flash_attention(q, k, v, causal=True, block_q=64, block_kv=64,
+                        interpret=True)
+    b = flash_attention(q, k, v, causal=True, block_q=128, block_kv=256,
+                        interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------
+
+SSD_CASES = [
+    # B, S, H, P, G, N, chunk
+    (2, 64, 4, 32, 2, 16, 16),
+    (1, 100, 2, 64, 1, 32, 32),   # padding path
+    (2, 256, 4, 64, 2, 64, 128),
+    (1, 128, 8, 64, 8, 64, 64),   # one group per head
+]
+
+
+@pytest.mark.parametrize("case", SSD_CASES)
+def test_ssd_scan_matches_recurrence(case):
+    B, S, H, P, G, N, chunk = case
+    x = _arr((B, S, H, P), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.3, size=(B, S, H)), jnp.float32)
+    A = jnp.asarray(-RNG.uniform(0.5, 2.0, size=(H,)), jnp.float32)
+    Bm = _arr((B, S, G, N), jnp.float32)
+    Cm = _arr((B, S, G, N), jnp.float32)
+    out = ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, interpret=True)
+    ref = ssd_ref(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=5e-4)
+
+
+def test_ssd_chunk_invariance():
+    B, S, H, P, G, N = 1, 192, 2, 32, 1, 16
+    x = _arr((B, S, H, P), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.3, size=(B, S, H)), jnp.float32)
+    A = jnp.asarray(-RNG.uniform(0.5, 2.0, size=(H,)), jnp.float32)
+    Bm = _arr((B, S, G, N), jnp.float32)
+    Cm = _arr((B, S, G, N), jnp.float32)
+    a = ssd_scan(x, dt, A, Bm, Cm, chunk=32, interpret=True)
+    b = ssd_scan(x, dt, A, Bm, Cm, chunk=96, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-4)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(4, 64, 128), (2, 100, 576), (1, 7, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_matches_ref(shape, dtype):
+    x = _arr(shape, dtype)
+    scale = _arr(shape[-1:], dtype)
+    out = rmsnorm(x, scale, interpret=True)
+    ref = rmsnorm_ref(x, scale)
+    # bf16: the oracle rounds to bf16 BEFORE the scale multiply, the fused
+    # kernel keeps f32 until the end — a few-ULP ordering difference.
+    tol = 1e-1 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=tol
+    )
+
+
+# ---------------------------------------------------------------------------
+# flash decode (single-query attention over a long cache)
+# ---------------------------------------------------------------------------
+
+from repro.kernels.decode_attention import decode_ref, flash_decode  # noqa: E402
+
+DECODE_CASES = [
+    # B, S, H, Hkv, D, block_kv
+    (2, 256, 8, 2, 64, 64),
+    (1, 300, 4, 4, 128, 128),   # padding path (300 % 128 != 0)
+    (3, 1024, 8, 1, 64, 512),   # MQA
+]
+
+
+@pytest.mark.parametrize("case", DECODE_CASES)
+def test_flash_decode_matches_ref(case):
+    B, S, H, Hkv, D, block = case
+    q = _arr((B, H, D), jnp.float32)
+    k = _arr((B, S, Hkv, D), jnp.float32)
+    v = _arr((B, S, Hkv, D), jnp.float32)
+    lengths = jnp.asarray(RNG.integers(1, S + 1, size=(B,)), jnp.int32)
+    out = flash_decode(q, k, v, lengths, block_kv=block, interpret=True)
+    ref = decode_ref(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_flash_decode_length_masking_exact():
+    """Entries beyond `lengths` must have zero influence."""
+    B, S, H, Hkv, D = 1, 128, 4, 2, 32
+    q = _arr((B, H, D), jnp.float32)
+    k = _arr((B, S, Hkv, D), jnp.float32)
+    v = _arr((B, S, Hkv, D), jnp.float32)
+    L = 50
+    out1 = flash_decode(q, k, v, jnp.array([L]), block_kv=64, interpret=True)
+    k2 = k.at[:, L:].set(99.0)   # poison the masked tail
+    v2 = v.at[:, L:].set(-99.0)
+    out2 = flash_decode(q, k2, v2, jnp.array([L]), block_kv=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=1e-6)

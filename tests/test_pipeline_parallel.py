@@ -1,0 +1,55 @@
+"""GPipe pipeline-parallel stage: subprocess (needs 4 forced devices)."""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import json
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from repro.dist.pipeline_parallel import pipeline_forward, stage_params
+
+    mesh = jax.make_mesh((4,), ("pipe",))
+    L, D = 8, 16
+    rng = jax.random.PRNGKey(0)
+    Ws = jax.random.normal(rng, (L, D, D)) * 0.2
+
+    def layer_fn(W, x):
+        return jnp.tanh(x @ W)
+
+    n_micro, mb = 6, 4
+    x = jax.random.normal(jax.random.PRNGKey(1), (n_micro, mb, D))
+
+    with jax.set_mesh(mesh):
+        out = pipeline_forward(layer_fn, stage_params(Ws, 4), x, mesh)
+
+    # Sequential reference.
+    def ref_fwd(h):
+        for i in range(L):
+            h = jnp.tanh(h @ Ws[i])
+        return h
+    ref = jax.vmap(ref_fwd)(x)
+    err = float(jnp.abs(out - ref).max())
+    print(json.dumps({"err": err}))
+    """
+)
+
+
+def test_gpipe_matches_sequential():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run(
+        [sys.executable, "-c", SCRIPT],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    data = json.loads(out.stdout.strip().splitlines()[-1])
+    assert data["err"] < 1e-5

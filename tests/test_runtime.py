@@ -1,0 +1,222 @@
+"""Runtime substrate: optimizers, checkpointing (atomic/async/resume),
+data pipeline, collectives math, compression, telemetry, and the
+end-to-end adaptive train loop with failure injection."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SimplifiedDelayModel, StrategyConfig
+from repro.core.diagnostics import DiagnosticConfig
+from repro.data import StagedBatcher, TokenStream
+from repro.dist.collectives import example_weights, masked_weighted_ce
+from repro.dist.compression import Int8Codec, ef_compress_tree
+from repro.optim.optimizers import (
+    adafactor,
+    adamw,
+    apply_updates,
+    clip_by_global_norm,
+    get_optimizer,
+    momentum,
+    sgd,
+)
+from repro.runtime.checkpoint import CheckpointManager
+from repro.runtime.telemetry import StragglerTracker
+
+
+# ---------------------------------------------------------------------------
+# Optimizers
+# ---------------------------------------------------------------------------
+
+def _quad_problem():
+    w = {"a": jnp.array([3.0, -2.0]), "b": jnp.array([[1.5]])}
+
+    def loss(p):
+        return jnp.sum(p["a"] ** 2) + jnp.sum(p["b"] ** 2)
+
+    return w, loss
+
+
+@pytest.mark.parametrize("name", ["sgd", "momentum", "adamw", "adafactor"])
+def test_optimizers_descend(name):
+    params, loss = _quad_problem()
+    opt = get_optimizer(name)
+    state = opt.init(params)
+    l0 = float(loss(params))
+    for _ in range(60):
+        grads = jax.grad(loss)(params)
+        updates, state = opt.update(grads, state, params, jnp.float32(0.05))
+        params = apply_updates(params, updates)
+    assert float(loss(params)) < l0 * 0.2
+
+
+def test_adafactor_factored_memory_shape():
+    params = {"w": jnp.zeros((256, 512)), "b": jnp.zeros((7,))}
+    opt = adafactor(min_dim_factored=128)
+    state = opt.init(params)
+    assert set(state.states["w"].keys()) == {"row", "col"}
+    assert state.states["w"]["row"].shape == (256,)
+    assert state.states["w"]["col"].shape == (512,)
+    assert set(state.states["b"].keys()) == {"v"}
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.full((4,), 100.0)}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    assert float(norm) == pytest.approx(200.0)
+    assert float(jnp.linalg.norm(clipped["a"])) == pytest.approx(1.0, rel=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Fastest-k masked aggregation math
+# ---------------------------------------------------------------------------
+
+def test_example_weights_layout():
+    mask = jnp.array([1.0, 0.0, 1.0, 0.0])
+    w = example_weights(mask, batch=8)
+    np.testing.assert_array_equal(
+        np.asarray(w), [1, 1, 0, 0, 1, 1, 0, 0]
+    )
+
+
+def test_masked_ce_equals_subset_ce():
+    """Masked CE over all workers == plain CE over the kept workers."""
+    rng = jax.random.PRNGKey(0)
+    B, S, V, n = 8, 4, 11, 4
+    logits = jax.random.normal(rng, (B, S, V))
+    labels = jax.random.randint(rng, (B, S), 0, V)
+    mask = jnp.array([1.0, 0.0, 1.0, 1.0])
+    loss_masked, _ = masked_weighted_ce(logits, labels, None, mask)
+    keep = np.repeat(np.asarray(mask) > 0, B // n)
+    loss_subset, _ = masked_weighted_ce(
+        logits[keep], labels[keep], None, None
+    )
+    assert float(loss_masked) == pytest.approx(float(loss_subset), rel=1e-6)
+
+
+def test_masked_gradient_unbiasedness():
+    """E over random k-subsets of the masked gradient == full gradient."""
+    rng = np.random.default_rng(0)
+    B, S, V, n = 8, 4, 7, 8
+    logits = jnp.asarray(rng.normal(size=(B, S, V)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, V, size=(B, S)))
+
+    def grad_for(mask):
+        f = lambda lg: masked_weighted_ce(lg, labels, None, mask)[0]
+        return np.asarray(jax.grad(f)(logits))
+
+    full = grad_for(jnp.ones((n,)))
+    acc = np.zeros_like(full)
+    trials = 400
+    k = 3
+    for _ in range(trials):
+        idx = rng.choice(n, size=k, replace=False)
+        m = np.zeros(n, np.float32)
+        m[idx] = 1
+        acc += grad_for(jnp.asarray(m))
+    np.testing.assert_allclose(acc / trials, full, atol=2e-2)
+
+
+# ---------------------------------------------------------------------------
+# Compression + error feedback
+# ---------------------------------------------------------------------------
+
+def test_int8_roundtrip_small_error():
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(256,)), jnp.float32)
+    q, scale = Int8Codec.encode(x)
+    err = np.abs(np.asarray(Int8Codec.decode(q, scale) - x)).max()
+    assert err <= float(scale) * 0.5 + 1e-9
+
+
+def test_error_feedback_converges():
+    """SGD on a quadratic with int8-compressed grads + EF still converges."""
+    w = jnp.array([5.0, -3.0, 2.0, -1.0])
+    resid = {"w": jnp.zeros_like(w)}
+    params = {"w": w}
+    for _ in range(300):
+        grads = {"w": 2 * params["w"]}
+        dec, resid = ef_compress_tree(grads, resid)
+        params = {"w": params["w"] - 0.05 * dec["w"]}
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_save_restore_roundtrip(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep_last=2)
+    state = {"w": jnp.arange(6.0).reshape(2, 3), "n": {"m": jnp.ones((4,))}}
+    mgr.save(10, state, extras={"stage": {"k": 3, "beta": 0.6}})
+    mgr.save(20, state)
+    mgr.save(30, state)
+    # retention: only last 2 kept
+    steps = sorted(p.name for p in tmp_path.iterdir() if p.name.startswith("step"))
+    assert steps == ["step_000000020", "step_000000030"]
+    assert mgr.latest_step() == 30
+
+    restored = mgr.restore_latest(state)
+    assert restored is not None
+    step, restored_state, extras = restored
+    assert step == 30
+    np.testing.assert_array_equal(
+        np.asarray(restored_state["w"]), np.asarray(state["w"])
+    )
+
+
+def test_checkpoint_async_and_extras(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    state = {"w": jnp.ones((8, 8))}
+    mgr.save_async(5, state, extras={"stage": {"k": 2, "beta": 1.0}})
+    mgr.wait()
+    step, restored, extras = mgr.restore_latest(state)
+    assert step == 5 and extras["stage"]["k"] == 2
+
+
+def test_checkpoint_atomicity_no_partial_dirs(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(1, {"w": jnp.zeros((2,))})
+    leftovers = [p for p in tmp_path.iterdir() if p.name.startswith(".tmp")]
+    assert not leftovers
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline
+# ---------------------------------------------------------------------------
+
+def test_staged_batcher_beta_scaling():
+    stream = TokenStream(vocab_size=97, seed=0)
+    b = StagedBatcher(stream, n_workers=4, global_batch=16, seq_len=8)
+    full = b.batch_for_stage(1.0)
+    half = b.batch_for_stage(0.5)
+    assert full["inputs"].shape == (16, 8)
+    assert half["inputs"].shape == (8, 8)
+    assert full["labels"].shape == full["inputs"].shape
+    # labels are next-token shifted views of the same stream
+    assert (full["inputs"][:, 1:] == full["labels"][:, :-1]).all()
+
+
+def test_token_stream_learnable_structure():
+    stream = TokenStream(vocab_size=97, seed=0, noise=0.0)
+    arr = stream.sequences(4, 16)
+    nxt = (31 * arr[:, :-1] + 17) % 97
+    assert (nxt == arr[:, 1:]).mean() == 1.0
+
+
+# ---------------------------------------------------------------------------
+# Telemetry / straggler demotion
+# ---------------------------------------------------------------------------
+
+def test_straggler_tracker_flags_persistent_straggler():
+    n = 8
+    tr = StragglerTracker(n, warmup=4)
+    rng = np.random.default_rng(0)
+    alive = np.ones(n, bool)
+    for _ in range(50):
+        z = rng.exponential(1.0, n)
+        z[3] *= 10.0  # worker 3 is 10x slower on average
+        tr.observe(z, alive)
+    assert tr.persistent_stragglers(4.0) == [3]

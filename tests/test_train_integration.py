@@ -1,0 +1,117 @@
+"""End-to-end integration: the adaptive-(k, beta) train loop on a tiny LM.
+
+Covers: learning progress, stage advancement (one compiled shape per
+beta), fastest-k masking metrics, failure injection, checkpoint resume,
+and gradient-accumulation equivalence.
+"""
+
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import DiagnosticConfig, SimplifiedDelayModel, StrategyConfig
+from repro.data import StagedBatcher, TokenStream
+from repro.models import build_model
+from repro.optim.optimizers import get_optimizer
+from repro.runtime.steps import make_train_step
+from repro.runtime.train_loop import TrainLoopConfig, train
+
+
+def _tiny():
+    cfg = get_config("smollm-135m").reduced(
+        n_layers=2, d_model=64, n_heads=2, n_kv_heads=2, head_dim=32,
+        d_ff=128, vocab_size=256, max_seq_len=64,
+    )
+    return cfg, build_model(cfg)
+
+
+def _setup(n=4, global_batch=16, seq_len=32):
+    cfg, model = _tiny()
+    strategy = StrategyConfig(
+        "adaptive_kbeta", n=n, s=global_batch // n, k_max=n // 2,
+        beta_grid=(0.5, 1.0),
+        diagnostic=DiagnosticConfig(kind="loss", rel_tol=0.05, min_iters=5,
+                                    consecutive=2),
+    )
+    delay = SimplifiedDelayModel(lambda_y=1.0, x=0.05)
+    batcher = StagedBatcher(TokenStream(cfg.vocab_size, seed=0), n_workers=n,
+                            global_batch=global_batch, seq_len=seq_len)
+    return cfg, model, strategy, delay, batcher
+
+
+def test_loop_learns_and_advances_stages():
+    cfg, model, strategy, delay, batcher = _setup()
+    out = train(model, get_optimizer("adamw"), strategy, delay, batcher,
+                TrainLoopConfig(total_steps=80, log_every=0))
+    hist = out["history"]
+    assert hist[-1]["loss"] < hist[0]["loss"] * 0.98
+    stages = {(h["k"], h["beta"]) for h in hist}
+    assert len(stages) >= 2, "controller must advance at least one stage"
+    # one compiled program per distinct batch shape (per beta)
+    assert 1 <= len(out["compiled_shapes"]) <= 2
+
+
+def test_loop_failure_injection_reduces_n():
+    cfg, model, strategy, delay, batcher = _setup()
+    out = train(model, get_optimizer("adamw"), strategy, delay, batcher,
+                TrainLoopConfig(total_steps=30, log_every=0,
+                                fail_worker_at=10, fail_worker_id=2))
+    assert out["controller"].cfg.n == 3
+    # training continued and stayed finite after the failure
+    assert np.isfinite([h["loss"] for h in out["history"]]).all()
+
+
+def test_loop_checkpoint_resume_exact():
+    cfg, model, strategy, delay, batcher = _setup()
+    with tempfile.TemporaryDirectory() as d:
+        out1 = train(model, get_optimizer("adamw"), strategy, delay, batcher,
+                     TrainLoopConfig(total_steps=40, log_every=0,
+                                     checkpoint_dir=d, checkpoint_every=20))
+        out2 = train(model, get_optimizer("adamw"), strategy, delay, batcher,
+                     TrainLoopConfig(total_steps=50, log_every=0,
+                                     checkpoint_dir=d, checkpoint_every=20))
+        assert out2["history"][0]["step"] == 40
+
+
+def test_grad_accumulation_matches_direct():
+    """accum_steps=2 must reproduce the single-batch gradient step."""
+    cfg, model = _tiny()
+    opt = get_optimizer("sgd")
+    rng = jax.random.PRNGKey(0)
+    params = model.init(rng, dtype_override="float32")
+    opt_state = opt.init(params)
+    n = 4
+    B, S = 8, 16
+    batch = {
+        "inputs": jax.random.randint(rng, (B, S), 0, cfg.vocab_size),
+        "labels": jax.random.randint(rng, (B, S), 0, cfg.vocab_size),
+        "worker_mask": jnp.array([1.0, 0.0, 1.0, 1.0]),
+        "lr": jnp.float32(0.1),
+    }
+    step1 = make_train_step(model, opt, clip_norm=None)
+    step2 = make_train_step(model, opt, clip_norm=None, accum_steps=2)
+    p1, _, m1 = step1(params, opt_state, batch)
+    p2, _, m2 = step2(params, opt_state, batch)
+    assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), rel=1e-5)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-5, rtol=1e-4)
+
+
+def test_straggler_demotion_in_loop():
+    cfg, model, strategy, delay, batcher = _setup()
+
+    class SlowWorker(SimplifiedDelayModel):
+        def sample(self, rng, n, beta):
+            z = super().sample(rng, n, beta)
+            return np.concatenate([z[:1] * 12.0, z[1:]])
+
+    slow = SlowWorker(lambda_y=1.0, x=0.05)
+    out = train(model, get_optimizer("adamw"), strategy, slow, batcher,
+                TrainLoopConfig(total_steps=40, log_every=0,
+                                demote_after_ewma=6.0))
+    assert out["controller"].cfg.n == 3, "persistent straggler demoted"
