@@ -1,0 +1,81 @@
+"""Masked fastest-k aggregation.
+
+The central node only waits for the fastest k of n workers; the batch is
+laid out WORKER-MAJOR (worker w owns the contiguous example slice
+``[w * b_w, (w + 1) * b_w)``, with ``b_w = beta * B / n`` set by the
+data pipeline's beta scaling). The responding-worker mask enters the
+loss as DATA, never as shape: per-example weights zero out the
+stragglers' examples and the normalizer counts only contributed tokens.
+
+This makes the masked step EXACTLY the dense step run on the k
+contributing workers' examples (the paper's aggregation, eq. (2)): the
+weights of dropped examples are zero, so their activations cannot
+influence the loss or any parameter gradient, and the normalization is
+over contributed tokens only. Under uniformly random k-subsets the
+masked gradient is an unbiased estimator of the full-batch gradient,
+with variance scaled by n/k (DESIGN.md §2.3).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["contributors", "example_weights", "masked_weighted_ce"]
+
+
+def contributors(worker_mask: jax.Array) -> jax.Array:
+    """Number of workers whose gradients entered the step (k_effective)."""
+    return jnp.sum(worker_mask.astype(jnp.float32))
+
+
+def example_weights(worker_mask: jax.Array, batch: int) -> jax.Array:
+    """Expand a (n_workers,) 0/1 mask to per-example weights (batch,).
+
+    The batch must be worker-major with equal per-worker shares: example
+    ``i`` belongs to worker ``i // (batch / n)``.
+    """
+    n = worker_mask.shape[0]
+    if batch % n != 0:
+        raise ValueError(
+            f"batch {batch} not divisible by n_workers {n}; the worker-major "
+            "layout requires equal per-worker shares"
+        )
+    per_worker = batch // n
+    return jnp.repeat(
+        worker_mask.astype(jnp.float32), per_worker,
+        total_repeat_length=batch,
+    )
+
+
+def masked_weighted_ce(
+    logits: jax.Array,
+    labels: jax.Array,
+    mask: Optional[jax.Array] = None,
+    worker_mask: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Cross-entropy with optional per-token mask and fastest-k worker mask.
+
+    logits: (B, S, V); labels: (B, S) int; mask: (B, S) or None;
+    worker_mask: (n_workers,) 0/1 or None (B must be a multiple of n).
+
+    Returns ``(loss, denom)`` where loss is the mean NLL over contributed
+    (unmasked, responding-worker) tokens and denom is that token count —
+    the weight used to recombine gradient-accumulation microbatches.
+    """
+    w = (
+        jnp.ones(labels.shape, jnp.float32)
+        if mask is None
+        else mask.astype(jnp.float32)
+    )
+    if worker_mask is not None:
+        w = w * example_weights(worker_mask, labels.shape[0])[:, None]
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = (lse - gold) * w
+    denom = w.sum()
+    loss = nll.sum() / jnp.maximum(denom, 1.0)
+    return loss, denom

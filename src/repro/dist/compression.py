@@ -1,0 +1,66 @@
+"""Gradient compression with error feedback.
+
+The paper's scheme trades a slight INCREASE in communication load
+(smaller beta -> more iterations -> more result uploads) for reduced
+computation. This module buys that communication back: workers upload
+int8-quantized results and carry the quantization error forward into the
+next round (error feedback, a la EF-SGD), which restores convergence to
+the uncompressed fixed point.
+
+``Int8Codec`` is a per-tensor absmax codec: 4x smaller uploads than
+float32 with max elementwise error of scale/2. ``ef_compress_tree``
+applies it leaf-wise over a gradient pytree while threading the residual
+state.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Int8Codec", "ef_compress_tree"]
+
+
+class Int8Codec:
+    """Per-tensor symmetric absmax int8 quantization."""
+
+    @staticmethod
+    def encode(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+        """x (float) -> (q int8, scale float32 scalar); x ~= q * scale."""
+        xf = x.astype(jnp.float32)
+        scale = jnp.max(jnp.abs(xf)) / 127.0
+        safe = jnp.maximum(scale, jnp.finfo(jnp.float32).tiny)
+        q = jnp.clip(jnp.round(xf / safe), -127, 127).astype(jnp.int8)
+        return q, scale
+
+    @staticmethod
+    def decode(q: jax.Array, scale: jax.Array) -> jax.Array:
+        return q.astype(jnp.float32) * scale
+
+
+def ef_compress_tree(grads, residual):
+    """Quantize a gradient pytree with error feedback.
+
+    Each leaf is compensated (``g + residual``), int8 round-tripped, and
+    the new residual is the quantization error. Returns
+    ``(decoded_grads, new_residual)`` with the input tree structure —
+    the decoded values are what the aggregator would reconstruct from
+    the workers' int8 uploads.
+    """
+    g_leaves, treedef = jax.tree.flatten(grads)
+    r_leaves, r_treedef = jax.tree.flatten(residual)
+    if treedef != r_treedef:
+        raise ValueError(
+            f"grads and residual tree structures do not match: "
+            f"{treedef} vs {r_treedef}"
+        )
+    decoded, new_resid = [], []
+    for g, r in zip(g_leaves, r_leaves):
+        v = g.astype(jnp.float32) + r.astype(jnp.float32)
+        q, scale = Int8Codec.encode(v)
+        d = Int8Codec.decode(q, scale)
+        decoded.append(d.astype(g.dtype))
+        new_resid.append(v - d)
+    return treedef.unflatten(decoded), treedef.unflatten(new_resid)

@@ -154,7 +154,7 @@ def dryrun_cell(
     seq_axis = seq_axis_for(cfg, shape.kind, variant)
     accum = accum_for(cfg, shape.kind, variant)
     with jax.set_mesh(mesh), activation_sharding(
-        mesh, seq_axis=seq_axis, dp_axes=dp_axes_for(variant)
+        mesh, seq_axis=seq_axis, dp_axes=dp_axes_for(variant), rules=rules
     ):
         if shape.kind == "train":
             optimizer = optimizer_for(cfg)
@@ -238,6 +238,8 @@ def _finish(cfg, shape, mesh, rules, variant, cell_id, mesh_name, compiled,
     shape_name = shape.name
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # older jax returns [dict]
+        cost = cost[0] if cost else None
     hlo = compiled.as_text()
     loop_cost = analyze_hlo(hlo)  # loop-aware (XLA counts while bodies once)
 

@@ -55,7 +55,8 @@ def main():
 
     import jax.numpy as jnp
 
-    with jax.set_mesh(mesh), activation_sharding(mesh, seq_axis=seq_axis):
+    with jax.set_mesh(mesh), activation_sharding(mesh, seq_axis=seq_axis,
+                                                 rules=rules):
         if shape.kind == "train":
             opt = dr.optimizer_for(cfg)
             params, opt_state = abstract_state(model, mesh, rules, opt)

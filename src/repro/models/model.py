@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.dist.collectives import masked_weighted_ce
 from repro.dist.sharding import constrain_batch
 from . import attention as attn
 from . import mamba2, moe, xlstm, zamba
@@ -329,9 +330,4 @@ def count_params_analytic(cfg: ModelConfig, active_only: bool = False) -> int:
 
 
 def _masked_ce(logits: jax.Array, labels: jax.Array, mask: jax.Array) -> jax.Array:
-    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
-    gold = jnp.take_along_axis(
-        logits.astype(jnp.float32), labels[..., None], axis=-1
-    )[..., 0]
-    nll = (lse - gold) * mask
-    return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+    return masked_weighted_ce(logits, labels, mask)[0]

@@ -81,10 +81,9 @@ def _dp_group_count(T: int) -> int:
     ctx = _ACT_CTX.get()
     if ctx is None:
         return 1
-    mesh, dp, _ = ctx
     g = 1
-    for a in dp:
-        g *= mesh.shape[a]
+    for a in ctx.dp:
+        g *= ctx.mesh.shape[a]
     return g if g > 1 and T % g == 0 else 1
 
 

@@ -1,0 +1,61 @@
+"""Hypothesis shim: property tests without a hard hypothesis dependency.
+
+Re-exports the real library when installed (pip install -r
+requirements-dev.txt). Otherwise provides a seeded-random fallback
+implementing the tiny subset the test suite uses — ``@given`` with
+``st.integers`` / ``st.floats`` strategies and ``@settings`` — so tier-1
+collects and runs with only pytest + jax. The fallback draws
+``max_examples`` pseudo-random cases from a per-test deterministic seed:
+weaker than hypothesis (no shrinking, no edge-case bias) but the same
+property checks.
+"""
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import random
+    import zlib
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class st:  # noqa: N801 — mirrors `hypothesis.strategies as st`
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    def settings(max_examples=25, **_ignored):
+        def deco(f):
+            f._max_examples = max_examples
+            return f
+
+        return deco
+
+    def given(**strategies):
+        def deco(f):
+            @functools.wraps(f)
+            def wrapper():
+                # @settings may wrap us afterwards; read the attribute off
+                # the surviving function object at call time.
+                n = getattr(wrapper, "_max_examples", 25)
+                rng = random.Random(zlib.crc32(f.__name__.encode()))
+                for _ in range(n):
+                    drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                    f(**drawn)
+
+            # pytest resolves fixture names through __wrapped__'s
+            # signature; the strategy params are not fixtures.
+            del wrapper.__wrapped__
+            return wrapper
+
+        return deco

@@ -1,0 +1,17 @@
+"""Shared test setup.
+
+Must run before ANY jax import: jax locks the device count on first
+backend initialization, and the mesh/sharding tests (make_test_mesh,
+constrain_batch under a real mesh) need multiple devices on CPU-only CI.
+The subprocess-based tests (test_sharding_and_cost, test_pipeline_parallel)
+set their own XLA_FLAGS in the child process and are unaffected.
+"""
+
+import os
+
+_FLAG = "--xla_force_host_platform_device_count=8"
+
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") + " " + _FLAG
+    ).strip()

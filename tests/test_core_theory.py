@@ -6,7 +6,7 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypo import given, settings, st  # hypothesis, or seeded fallback
 
 from repro.core import (
     GeneralizedDelayModel,

@@ -1,0 +1,235 @@
+"""repro.dist package tests: the fastest-k masked step must be EXACTLY
+the dense step run on the contributing workers (the paper's aggregation
+equivalence), plus compression round-trip / error-feedback convergence
+and the pure sharding-rule functions."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.dist.collectives import contributors, example_weights, masked_weighted_ce
+from repro.dist.compression import Int8Codec, ef_compress_tree
+from repro.dist.sharding import (
+    DEFAULT_RULES,
+    PURE_DP_RULES,
+    batch_pspec,
+    logical_to_pspec,
+)
+
+
+# ---------------------------------------------------------------------------
+# Fastest-k masked aggregation == dense-k reference
+# ---------------------------------------------------------------------------
+
+def _random_mask(rng, n, k):
+    idx = rng.choice(n, size=k, replace=False)
+    m = np.zeros(n, np.float32)
+    m[idx] = 1.0
+    return jnp.asarray(m)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+@pytest.mark.parametrize("k", [1, 3, 6])
+def test_masked_loss_equals_dense_subset(seed, k):
+    rng = np.random.default_rng(seed)
+    n, bw, S, V = 6, 3, 5, 13
+    B = n * bw
+    logits = jnp.asarray(rng.normal(size=(B, S, V)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, V, size=(B, S)))
+    mask = _random_mask(rng, n, k)
+
+    loss_masked, denom_masked = masked_weighted_ce(logits, labels, None, mask)
+    keep = np.repeat(np.asarray(mask) > 0, bw)
+    loss_dense, denom_dense = masked_weighted_ce(
+        logits[keep], labels[keep], None, None
+    )
+    assert float(loss_masked) == pytest.approx(float(loss_dense), rel=1e-6)
+    assert float(denom_masked) == pytest.approx(float(denom_dense))
+    assert float(denom_masked) == k * bw * S
+
+
+@pytest.mark.parametrize("seed", [0, 7])
+def test_masked_gradient_equals_dense_subset_gradient(seed):
+    """End-to-end: parameter gradients of the masked step match the dense
+    step restricted to the contributing workers, example for example."""
+    from repro.configs import get_config
+    from repro.models import build_model
+
+    rng = np.random.default_rng(seed)
+    n, bw, S = 4, 2, 16
+    B = n * bw
+    cfg = get_config("smollm-135m").reduced(
+        n_layers=2, d_model=64, n_heads=2, n_kv_heads=2, head_dim=32,
+        d_ff=128, vocab_size=64, max_seq_len=S,
+    )
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed), dtype_override="float32")
+    inputs = jnp.asarray(rng.integers(0, cfg.vocab_size, size=(B, S)))
+    labels = jnp.asarray(rng.integers(0, cfg.vocab_size, size=(B, S)))
+    mask = _random_mask(rng, n, k=2)
+
+    def masked_loss(p):
+        positions = jnp.arange(S)
+        h, _ = model.hidden(p, inputs, positions)
+        logits = model.logits(p, h)
+        return masked_weighted_ce(logits, labels, None, mask)[0]
+
+    keep = np.repeat(np.asarray(mask) > 0, bw)
+
+    def dense_loss(p):
+        positions = jnp.arange(S)
+        h, _ = model.hidden(p, inputs[keep], positions)
+        logits = model.logits(p, h)
+        return masked_weighted_ce(logits, labels[keep], None, None)[0]
+
+    g_masked = jax.grad(masked_loss)(params)
+    g_dense = jax.grad(dense_loss)(params)
+    for gm, gd in zip(jax.tree.leaves(g_masked), jax.tree.leaves(g_dense)):
+        np.testing.assert_allclose(
+            np.asarray(gm), np.asarray(gd), rtol=2e-4, atol=2e-6
+        )
+
+
+def test_masked_step_never_recompiles_across_masks():
+    """The worker mask is data, not shape: one compiled program serves
+    every fastest-k subset."""
+    rng = np.random.default_rng(0)
+    B, S, V, n = 8, 4, 11, 4
+    logits = jnp.asarray(rng.normal(size=(B, S, V)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, V, size=(B, S)))
+
+    traces = []
+
+    @jax.jit
+    def step(mask):
+        traces.append(1)
+        return masked_weighted_ce(logits, labels, None, mask)[0]
+
+    for k in (1, 2, 3, 4):
+        step(_random_mask(rng, n, k)).block_until_ready()
+    assert len(traces) == 1
+
+
+def test_example_weights_worker_major_layout():
+    w = example_weights(jnp.array([0.0, 1.0, 1.0]), batch=6)
+    np.testing.assert_array_equal(np.asarray(w), [0, 0, 1, 1, 1, 1])
+
+
+def test_example_weights_rejects_ragged_batch():
+    with pytest.raises(ValueError):
+        example_weights(jnp.ones((3,)), batch=7)
+
+
+def test_contributors_counts_mask():
+    assert float(contributors(jnp.array([1.0, 0.0, 1.0, 1.0]))) == 3.0
+
+
+def test_masked_ce_with_token_mask_and_worker_mask():
+    """Token masks compose with worker masks (both weights multiply)."""
+    rng = np.random.default_rng(3)
+    B, S, V, n = 4, 6, 9, 2
+    logits = jnp.asarray(rng.normal(size=(B, S, V)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, V, size=(B, S)))
+    tok = jnp.asarray((rng.random((B, S)) > 0.3).astype(np.float32))
+    wm = jnp.array([1.0, 0.0])
+    loss, denom = masked_weighted_ce(logits, labels, tok, wm)
+    keep = np.repeat(np.asarray(wm) > 0, B // n)
+    ref, ref_denom = masked_weighted_ce(logits[keep], labels[keep], tok[keep], None)
+    assert float(loss) == pytest.approx(float(ref), rel=1e-6)
+    assert float(denom) == pytest.approx(float(ref_denom))
+
+
+# ---------------------------------------------------------------------------
+# Int8 codec + error feedback
+# ---------------------------------------------------------------------------
+
+def test_int8_roundtrip_bounded_by_half_scale():
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(64, 33)), jnp.float32)
+    q, scale = Int8Codec.encode(x)
+    assert q.dtype == jnp.int8
+    err = np.abs(np.asarray(Int8Codec.decode(q, scale)) - np.asarray(x)).max()
+    assert err <= float(scale) * 0.5 + 1e-9
+
+
+def test_int8_zero_tensor_is_exact():
+    q, scale = Int8Codec.encode(jnp.zeros((17,)))
+    assert float(scale) == 0.0
+    np.testing.assert_array_equal(np.asarray(Int8Codec.decode(q, scale)), 0.0)
+
+
+def test_ef_residual_is_exactly_the_quantization_error():
+    x = {"a": jnp.asarray(np.random.default_rng(1).normal(size=(40,)), jnp.float32)}
+    resid = {"a": jnp.zeros((40,))}
+    dec, new_resid = ef_compress_tree(x, resid)
+    np.testing.assert_allclose(
+        np.asarray(dec["a"] + new_resid["a"]), np.asarray(x["a"]), rtol=1e-6
+    )
+
+
+def test_ef_compress_tree_structure_and_convergence():
+    """EF-SGD on a quadratic reaches the uncompressed fixed point; the
+    tree structure (nested dicts) is preserved leaf-for-leaf."""
+    params = {"w": jnp.array([4.0, -2.0]), "nest": {"b": jnp.array([[1.0, -3.0]])}}
+    resid = jax.tree.map(jnp.zeros_like, params)
+    for _ in range(400):
+        grads = jax.tree.map(lambda p: 2 * p, params)
+        dec, resid = ef_compress_tree(grads, resid)
+        assert jax.tree.structure(dec) == jax.tree.structure(params)
+        params = jax.tree.map(lambda p, g: p - 0.05 * g, params, dec)
+    for leaf in jax.tree.leaves(params):
+        assert float(jnp.abs(leaf).max()) < 1e-2
+
+
+def test_ef_mismatched_trees_raise():
+    with pytest.raises(ValueError):
+        ef_compress_tree({"a": jnp.ones(3)}, {"a": jnp.ones(3), "b": jnp.ones(3)})
+
+
+# ---------------------------------------------------------------------------
+# Sharding rules (pure functions; no devices needed)
+# ---------------------------------------------------------------------------
+
+def _mesh_stub(shape_map):
+    class M:
+        shape = shape_map
+    return M()
+
+
+def test_pure_dp_rules_replicate_params_and_shard_batch():
+    mesh = _mesh_stub({"data": 4, "model": 2})
+    p = logical_to_pspec(("vocab", "embed"), (512, 64), mesh, PURE_DP_RULES)
+    assert tuple(p) == ()
+    b = logical_to_pspec(("act_batch", None), (8, 16), mesh, PURE_DP_RULES)
+    assert b[0] == ("data", "model")  # pod absent; 8 % (4*2) == 0
+    b2 = logical_to_pspec(("act_batch", None), (4, 16), mesh, PURE_DP_RULES)
+    assert b2[0] == "data"  # 4 % 8 != 0 -> trailing model axis dropped
+
+
+def test_batch_pspec_partial_and_trailing_dims():
+    mesh = _mesh_stub({"pod": 2, "data": 4, "model": 2})
+    p = batch_pspec(mesh, 16, 1)
+    assert tuple(p) == (("pod", "data"), None)
+    # 6 % (2*4) != 0 but 6 % 2 == 0: falls back to pod only.
+    p2 = batch_pspec(mesh, 6, 1)
+    assert tuple(p2) == ("pod", None)
+    # Prime batch: fully replicated.
+    assert tuple(batch_pspec(mesh, 7, 2)) == ()
+
+
+def test_pipeline_forward_rejects_stage_mismatch():
+    from repro.dist.pipeline_parallel import pipeline_forward, stage_params
+
+    staged = stage_params(jnp.zeros((8, 4, 4)), 2)  # 2 stages
+    mesh = _mesh_stub({"pipe": 4})                   # 4-way pipeline axis
+    with pytest.raises(ValueError, match="leading dim"):
+        pipeline_forward(lambda w, h: h, staged, jnp.zeros((6, 3, 4)), mesh)
+
+
+def test_default_rules_never_reuse_mesh_axis():
+    mesh = _mesh_stub({"data": 2, "model": 2})
+    p = logical_to_pspec(
+        ("expert", "embed", "expert_ffn"), (4, 64, 128), mesh, DEFAULT_RULES
+    )
+    assert p[0] == "model" and p[1] == "data"
+    assert len(p) < 3 or p[2] is None

@@ -3,7 +3,7 @@ production path)."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypo import given, settings, st  # hypothesis, or seeded fallback
 
 from repro.core import (
     Controller,
