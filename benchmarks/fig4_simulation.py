@@ -47,7 +47,9 @@ def run(fast: bool = True):
     model = SimplifiedDelayModel(lambda_y=1.0, x=0.01)
     hp = _calibrated_hp(problem)
     e0 = problem.gap(np.zeros(problem.d))
-    seeds = 6 if fast else 24
+    # The batched engine prices a batch of S lanes at roughly one scalar
+    # run, so even fast mode affords the paper-scale seed count.
+    seeds = 24 if fast else 64
     max_iters = 20_000 if fast else 60_000
 
     def cfg(strategy, diag=None):

@@ -41,7 +41,7 @@ SCHEMES = {
 
 def run(fast: bool = True):
     problem = LinregProblem.generate(v=400, d=10, n_workers=20, seed=1)
-    seeds = 4 if fast else 16
+    seeds = 16 if fast else 48
     max_iters = 15_000 if fast else 50_000
     diag = DiagnosticConfig(kind="distance", threshold=1.0, ratio=1.4,
                             min_iters=8, consecutive=2)

@@ -20,7 +20,7 @@ ERROR_LEVELS = (0.5, 0.2, 0.1, 0.05, 2e-2)
 def run(fast: bool = True):
     problem = LinregProblem.generate(v=400, d=10, n_workers=20, seed=1)
     model = GeneralizedDelayModel(lambda_x=1.0, lambda_y=100.0)
-    seeds = 4 if fast else 16
+    seeds = 16 if fast else 48
     max_iters = 15_000 if fast else 50_000
     diag = DiagnosticConfig(kind="distance", threshold=1.0, ratio=1.4,
                             min_iters=8, consecutive=2)

@@ -1,0 +1,160 @@
+"""Perf trajectory of the simulation engines: scalar vs batched.
+
+Times ``repro.core.simulation.simulate`` (per-seed reference oracle)
+against ``repro.core.vector_sim.simulate_batch`` at several
+(n, seeds, iters) points and writes the measurements to
+``BENCH_sim.json`` — the repo's perf record for its hottest path. The
+headline point is the paper's Fig. 4 configuration (n=20, 24 seeds,
+20k iterations); the acceptance floor there is a 20x speedup on CPU
+(EXPERIMENTS.md §Perf tracks the measured numbers per machine).
+
+    PYTHONPATH=src python -m benchmarks.perf_sim [--full] [--out PATH]
+
+Fast mode (the default, used by the CI smoke step) runs scaled-down
+points; ``--full`` runs the acceptance configuration.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import platform
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core import (
+    LinregProblem,
+    SimplifiedDelayModel,
+    StrategyConfig,
+    simulate,
+    simulate_batch,
+)
+
+from .common import PAPER_GRID, Timer
+
+DEFAULT_OUT = "BENCH_sim.json"
+
+
+@dataclasses.dataclass(frozen=True)
+class PerfPoint:
+    name: str
+    n: int          # workers (s stays 20 samples/worker as in Fig. 4)
+    seeds: int
+    iters: int
+    strategy: str
+
+    @property
+    def v(self) -> int:
+        return self.n * 20
+
+
+# Fig. 4 runs both adaptive strategies; time each separately so the
+# beta<1 subsampling path (adaptive_kbeta) and the pure beta=1 path
+# (adaptive_k) are both tracked.
+FULL_POINTS = (
+    PerfPoint("fig4_kbeta", n=20, seeds=24, iters=20_000, strategy="adaptive_kbeta"),
+    PerfPoint("fig4_k", n=20, seeds=24, iters=20_000, strategy="adaptive_k"),
+    PerfPoint("small_n", n=10, seeds=24, iters=20_000, strategy="adaptive_kbeta"),
+    PerfPoint("large_n", n=50, seeds=24, iters=8_000, strategy="adaptive_kbeta"),
+)
+
+FAST_POINTS = (
+    PerfPoint("fig4_kbeta_smoke", n=20, seeds=8, iters=2_000, strategy="adaptive_kbeta"),
+    PerfPoint("fig4_k_smoke", n=20, seeds=8, iters=2_000, strategy="adaptive_k"),
+)
+
+
+def _setup(pt: PerfPoint) -> Tuple[LinregProblem, StrategyConfig, SimplifiedDelayModel]:
+    problem = LinregProblem.generate(v=pt.v, d=10, n_workers=pt.n, seed=1)
+    cfg = StrategyConfig(
+        pt.strategy, n=pt.n, s=20, k_max=max(pt.n // 2, 1), beta_grid=PAPER_GRID
+    )
+    model = SimplifiedDelayModel(lambda_y=1.0, x=0.01)
+    return problem, cfg, model
+
+
+def measure_point(pt: PerfPoint, *, scalar_seeds: Optional[int] = None) -> dict:
+    """Time scalar (per-seed loop) vs batched at one configuration.
+
+    ``scalar_seeds`` caps how many scalar runs are actually timed (the
+    per-seed cost is flat, so fast mode extrapolates from fewer seeds —
+    recorded explicitly in the output as ``scalar_seeds_timed``).
+    """
+    problem, cfg, model = _setup(pt)
+    n_scalar = pt.seeds if scalar_seeds is None else min(scalar_seeds, pt.seeds)
+
+    with Timer() as tb:
+        batch = simulate_batch(
+            problem, cfg, model, seeds=pt.seeds, max_iters=pt.iters, eval_every=10
+        )
+    with Timer() as ts:
+        for seed in range(n_scalar):
+            simulate(
+                problem, cfg, model, seed=seed, max_iters=pt.iters, eval_every=10
+            )
+    scalar_total = ts.elapsed * (pt.seeds / n_scalar)
+    # Equivalence spot check rides along: lane 0 vs scalar seed 0.
+    ref = simulate(problem, cfg, model, seed=0, max_iters=pt.iters, eval_every=10)
+    lane = batch.lane(0)
+    equal = bool(
+        np.allclose(ref.gaps, lane.gaps, rtol=1e-7, atol=1e-10)
+        and np.allclose(ref.times, lane.times, rtol=1e-7, atol=1e-10)
+    )
+    return {
+        "name": pt.name,
+        "n": pt.n,
+        "seeds": pt.seeds,
+        "iters": pt.iters,
+        "strategy": pt.strategy,
+        "scalar_seconds": round(scalar_total, 4),
+        "scalar_seconds_per_seed": round(scalar_total / pt.seeds, 4),
+        "scalar_seeds_timed": n_scalar,
+        "batch_seconds": round(tb.elapsed, 4),
+        "speedup": round(scalar_total / tb.elapsed, 2),
+        "batch_us_per_iter": round(tb.elapsed / pt.iters * 1e6, 2),
+        "lane0_matches_scalar": equal,
+    }
+
+
+def run(fast: bool = True, out: Optional[str] = None) -> dict:
+    points = FAST_POINTS if fast else FULL_POINTS
+    scalar_seeds = 4 if fast else None
+    results = []
+    print(f"{'point':22s} {'scalar s':>9s} {'batch s':>8s} {'speedup':>8s}  lane0==scalar")
+    for pt in points:
+        r = measure_point(pt, scalar_seeds=scalar_seeds)
+        results.append(r)
+        print(
+            f"{r['name']:22s} {r['scalar_seconds']:9.2f} {r['batch_seconds']:8.2f} "
+            f"{r['speedup']:7.1f}x  {r['lane0_matches_scalar']}"
+        )
+    payload = {
+        "benchmark": "perf_sim",
+        "mode": "fast" if fast else "full",
+        "machine": platform.machine(),
+        "python": platform.python_version(),
+        "numpy": np.__version__,
+        "points": results,
+    }
+    if out is not None:
+        with open(out, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {out}")
+    return payload
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="acceptance configuration (Fig. 4: n=20, 24 seeds, "
+                         "20k iters); fast mode runs scaled-down smoke points")
+    ap.add_argument("--out", type=str, default=DEFAULT_OUT, metavar="PATH",
+                    help=f"JSON output path (default {DEFAULT_OUT})")
+    args = ap.parse_args()
+    run(fast=not args.full, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,16 +1,46 @@
 """Benchmark runner: one module per paper table/figure + the roofline report.
 
-    PYTHONPATH=src python -m benchmarks.run [--full]
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME] [--json PATH]
 
-Prints a `name,seconds,status` CSV at the end.
+Prints a `name,seconds,status` CSV at the end; ``--json PATH`` also
+writes the summary plus each figure's key metrics as machine-readable
+JSON (consumed by the CI benchmark-smoke artifact).
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
+
+
+def _jsonable(obj):
+    """Best-effort conversion of benchmark return values to JSON types."""
+    import numpy as np
+
+    if isinstance(obj, dict):
+        return {str(k): _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    if isinstance(obj, np.bool_):
+        return bool(obj)
+    if isinstance(obj, (np.integer,)):
+        return int(obj)
+    if isinstance(obj, (np.floating,)):
+        return _jsonable(float(obj))
+    if isinstance(obj, np.ndarray):
+        return _jsonable(obj.tolist())
+    if isinstance(obj, float):
+        if obj != obj:
+            return "nan"
+        if obj in (float("inf"), float("-inf")):
+            return "inf" if obj > 0 else "-inf"
+        return obj
+    if obj is None or isinstance(obj, (bool, int, str)):
+        return obj
+    return str(obj)
 
 
 def main() -> None:
@@ -18,38 +48,57 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale seeds/grids (slow)")
     ap.add_argument("--only", type=str, default=None)
+    ap.add_argument("--json", type=str, default=None, metavar="PATH",
+                    help="write name,seconds,status summary + per-figure "
+                         "key metrics as JSON")
     args = ap.parse_args()
     fast = not args.full
 
     from . import fig1_3_theory, fig4_simulation, fig5to7_general_model
-    from . import fig8to9_costs, roofline_report
+    from . import fig8to9_costs, perf_sim, roofline_report
 
     benches = {
         "fig1_3_theory": fig1_3_theory.run,
         "fig4_simulation": fig4_simulation.run,
         "fig5to7_general_model": fig5to7_general_model.run,
         "fig8to9_costs": fig8to9_costs.run,
+        "perf_sim": perf_sim.run,
         "roofline_report": roofline_report.run,
     }
     if args.only:
         benches = {k: v for k, v in benches.items() if args.only in k}
 
     summary = []
+    metrics = {}
     failed = 0
     for name, fn in benches.items():
         print(f"\n{'=' * 72}\n== {name}\n{'=' * 72}", flush=True)
-        t0 = time.time()
+        t0 = time.perf_counter()
         try:
-            fn(fast=fast)
-            summary.append((name, time.time() - t0, "ok"))
+            metrics[name] = fn(fast=fast)
+            summary.append((name, time.perf_counter() - t0, "ok"))
         except Exception as e:  # noqa: BLE001
             traceback.print_exc()
-            summary.append((name, time.time() - t0, f"FAIL: {e}"))
+            summary.append((name, time.perf_counter() - t0, f"FAIL: {e}"))
             failed += 1
 
     print("\nname,seconds,status")
     for name, secs, status in summary:
         print(f"{name},{secs:.1f},{status}")
+
+    if args.json:
+        payload = {
+            "mode": "fast" if fast else "full",
+            "summary": [
+                {"name": name, "seconds": round(secs, 3), "status": status}
+                for name, secs, status in summary
+            ],
+            "figures": _jsonable(metrics),
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {args.json}")
+
     if failed:
         sys.exit(1)
 

@@ -10,10 +10,11 @@ Public surface:
   stationarity diagnostics       -> repro.core.diagnostics
   analytic schedule roll-out     -> repro.core.schedule
   straggler simulation engine    -> repro.core.simulation
+  batched (multi-seed) engine    -> repro.core.vector_sim
 """
 
 from .beta_opt import beta_min_for, cor4_beta, numerical_beta, optimal_beta
-from .controller import Controller, Stage, StrategyConfig, next_stage
+from .controller import Controller, Stage, StrategyConfig, next_stage, stage_table
 from .delay_models import (
     GeneralizedDelayModel,
     SimplifiedDelayModel,
@@ -26,6 +27,7 @@ from .order_stats import expected_kth, expected_kth_derivative, harmonic_tail
 from .schedule import ScheduleResult, StageRecord, evaluate_schedule
 from .simulation import LinregProblem, SimResult, simulate
 from .switching import gap_at_switch, switching_interval
+from .vector_sim import BatchSimResult, simulate_batch
 
 __all__ = [
     "GeneralizedDelayModel",
@@ -49,6 +51,7 @@ __all__ = [
     "Stage",
     "StrategyConfig",
     "next_stage",
+    "stage_table",
     "DiagnosticConfig",
     "DistanceDiagnostic",
     "PflugDiagnostic",
@@ -58,4 +61,6 @@ __all__ = [
     "LinregProblem",
     "SimResult",
     "simulate",
+    "BatchSimResult",
+    "simulate_batch",
 ]

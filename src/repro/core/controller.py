@@ -28,7 +28,7 @@ from .delay_models import fit_simplified_mle
 from .diagnostics import DiagnosticConfig, make_diagnostic
 from .order_stats import DelayModel, expected_kth
 
-__all__ = ["StrategyConfig", "Stage", "Controller", "next_stage"]
+__all__ = ["StrategyConfig", "Stage", "Controller", "next_stage", "stage_table"]
 
 STRATEGIES = ("naive", "fastest_k", "adaptive_k", "adaptive_kbeta")
 
@@ -141,6 +141,29 @@ def next_stage(
             return Stage(k_next, 1.0) if k_next * 1.0 > cur.phi else None
         b_next = nb
     return Stage(k_next, b_next)
+
+
+def stage_table(
+    cfg: StrategyConfig, model: Optional[DelayModel]
+) -> List[Stage]:
+    """The full (k, beta) stage sequence of ``cfg.strategy``, precomputed.
+
+    The grid walk in ``next_stage`` is deterministic given a fixed delay
+    model, so a run-time controller only needs an *index* into this table
+    plus its diagnostic state. The batched simulation engine
+    (``repro.core.vector_sim``) tracks one such index per seed lane; the
+    scalar ``Controller`` walks the same sequence incrementally.
+
+    Termination is guaranteed: every strategy either has a single stage
+    or strictly grows k (adaptive_k) / phi = k*beta (adaptive_kbeta) up
+    to the bounded maximum.
+    """
+    stages = [cfg.initial_stage()]
+    while True:
+        nxt = next_stage(cfg, stages[-1], model)
+        if nxt is None:
+            return stages
+        stages.append(nxt)
 
 
 class Controller:

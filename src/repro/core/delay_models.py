@@ -42,6 +42,9 @@ class SimplifiedDelayModel:
     x: float = 0.0   # constant communication time
     y: float = 0.0   # constant computation offset
 
+    #: number of standard-exponential draws per worker needed by ``compose``
+    n_exp_streams = 1
+
     def __post_init__(self) -> None:
         if self.lambda_y <= 0:
             raise ValueError(f"lambda_y must be > 0, got {self.lambda_y}")
@@ -65,6 +68,19 @@ class SimplifiedDelayModel:
         _check_beta(beta)
         return self.shift + rng.exponential(scale=beta / self.lambda_y, size=n)
 
+    def compose(self, E: np.ndarray, beta) -> np.ndarray:
+        """Response times from pre-drawn standard exponentials.
+
+        ``E`` has shape ``(..., n_exp_streams, n)``; ``beta`` is a scalar
+        or an array broadcastable against the leading axes (one load per
+        batch lane). Both simulation engines draw ``E`` in chunks and
+        compose lazily, so scalar and batched runs consume identical RNG
+        streams per lane regardless of the stage schedule.
+        """
+        _check_beta(beta)
+        scale = np.asarray(beta) / self.lambda_y
+        return self.shift + scale * E[..., 0, :]
+
 
 @dataclasses.dataclass(frozen=True)
 class GeneralizedDelayModel:
@@ -74,6 +90,8 @@ class GeneralizedDelayModel:
     lambda_y: float  # computation rate at beta = 1
     x: float = 0.0
     y: float = 0.0
+
+    n_exp_streams = 2
 
     def __post_init__(self) -> None:
         if self.lambda_x <= 0 or self.lambda_y <= 0:
@@ -98,9 +116,24 @@ class GeneralizedDelayModel:
         comp = rng.exponential(scale=beta / self.lambda_y, size=n)
         return self.shift(beta) + comm + comp
 
+    def compose(self, E: np.ndarray, beta) -> np.ndarray:
+        """Response times from pre-drawn standard exponentials.
 
-def _check_beta(beta: float) -> None:
-    if not (0.0 < beta <= 1.0):
+        ``E[..., 0, :]`` feeds the communication term, ``E[..., 1, :]``
+        the load-scaled computation term (see ``SimplifiedDelayModel.compose``).
+        """
+        b = np.asarray(beta)
+        comp_scale = b / self.lambda_y
+        return (
+            self.shift(beta)
+            + E[..., 0, :] / self.lambda_x
+            + comp_scale * E[..., 1, :]
+        )
+
+
+def _check_beta(beta) -> None:
+    b = np.asarray(beta)
+    if np.any(b <= 0.0) or np.any(b > 1.0):
         raise ValueError(f"beta must be in (0, 1], got {beta}")
 
 

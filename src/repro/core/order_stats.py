@@ -26,7 +26,7 @@ from __future__ import annotations
 
 import math
 from functools import lru_cache
-from typing import Union
+from typing import Tuple, Union
 
 import numpy as np
 
@@ -97,24 +97,39 @@ def _hypoexp_cdf(z: np.ndarray, a: float, b: float) -> np.ndarray:
     return 1.0 - (b * np.exp(-a * z) - a * np.exp(-b * z)) / (b - a)
 
 
-def _binom_tail(p: np.ndarray, n: int, k: int) -> np.ndarray:
-    """P(Binomial(n, p) >= k), computed stably in linear recursion.
+@lru_cache(maxsize=1024)
+def _log_binom_tail_coeffs(n: int, k: int) -> Tuple[np.ndarray, np.ndarray]:
+    """(j, log C(n, j)) for j = k..n — the tail's summation support."""
+    j = np.arange(k, n + 1, dtype=np.float64)
+    lg_n1 = math.lgamma(n + 1)
+    logc = np.array(
+        [lg_n1 - math.lgamma(jj + 1) - math.lgamma(n - jj + 1) for jj in range(k, n + 1)]
+    )
+    return j, logc
 
-    Evaluates sum_{j=k}^{n} C(n,j) p^j (1-p)^(n-j) via the complement
-    regularized incomplete beta using a continued-fraction-free approach:
-    direct summation in log space from the mode outward is overkill here —
-    for the n <= a few hundred used by schedules, iterative terms in
-    float64 with log-binomials are accurate.
+
+def _binom_tail(p: np.ndarray, n: int, k: int) -> np.ndarray:
+    """P(Binomial(n, p) >= k) = sum_{j=k}^{n} C(n,j) p^j (1-p)^(n-j).
+
+    Fully vectorized over the evaluation points (the quadrature nodes of
+    ``_hypoexp_kth_mean``): the log-binomial coefficient vector for the
+    (n, k) tail is precomputed once and the whole term matrix is
+    evaluated as one broadcasted logsumexp — no Python loop over j. For
+    the n <= a few hundred used by schedules, float64 log-space terms
+    are accurate.
     """
     p = np.clip(np.asarray(p, dtype=np.float64), 0.0, 1.0)
-    out = np.zeros_like(p)
     logp = np.log(np.clip(p, 1e-300, 1.0))
     log1mp = np.log1p(-np.clip(p, 0.0, 1.0 - 1e-16))
-    for j in range(k, n + 1):
-        logc = (
-            math.lgamma(n + 1) - math.lgamma(j + 1) - math.lgamma(n - j + 1)
-        )
-        out += np.exp(logc + j * logp + (n - j) * log1mp)
+    j, logc = _log_binom_tail_coeffs(n, k)
+    # terms[..., m] = log of the j=k+m summand at each evaluation point.
+    terms = (
+        logc
+        + logp[..., None] * j
+        + log1mp[..., None] * (n - j)
+    )
+    m = terms.max(axis=-1, keepdims=True)
+    out = np.exp(m[..., 0]) * np.sum(np.exp(terms - m), axis=-1)
     # p == 1 exactly -> tail is 1.
     out = np.where(p >= 1.0 - 1e-16, 1.0, out)
     return np.clip(out, 0.0, 1.0)

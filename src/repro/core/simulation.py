@@ -27,7 +27,65 @@ import numpy as np
 from .controller import Controller, Stage, StrategyConfig
 from .order_stats import DelayModel
 
-__all__ = ["LinregProblem", "SimResult", "simulate"]
+__all__ = [
+    "LinregProblem",
+    "SimResult",
+    "simulate",
+    "spawn_lane_rngs",
+    "chunk_len",
+    "draw_response_chunk",
+    "draw_key_chunk",
+]
+
+
+# ---------------------------------------------------------------------------
+# Shared RNG-lane layout (DESIGN.md §9.2)
+#
+# Scalar and batched engines must consume *identical* per-seed streams so
+# ``simulate_batch`` reproduces ``simulate`` lane-for-lane. Each seed owns
+# two independent sub-streams (spawned off one SeedSequence):
+#
+#   z-stream : standard exponentials, chunks of (chunk, n_exp_streams, n),
+#              composed into response times via ``model.compose`` — the
+#              load ``beta`` only scales the draws, so the stream layout
+#              is independent of the stage schedule.
+#   u-stream : uniform sort-keys, chunks of (chunk, n, s). Worker ``i``'s
+#              batch at load ``beta`` is the ``bs = round(beta * s)``
+#              samples with the smallest keys in row ``i`` — an exact
+#              without-replacement sample that the scalar engine extracts
+#              by argpartition and the batched engine by thresholding.
+#
+# Both streams advance one slice per iteration unconditionally, so the
+# chunk position depends only on the iteration count, never on (k, beta).
+# ---------------------------------------------------------------------------
+
+_CHUNK_TARGET_ELEMS = 2_000_000
+
+
+def chunk_len(n: int, s: int) -> int:
+    """Iterations per RNG chunk — part of the stream layout, so it must
+    depend only on (n, s), never on lane count or stage state."""
+    return max(8, min(256, _CHUNK_TARGET_ELEMS // max(n * s, 1)))
+
+
+def spawn_lane_rngs(seed: int) -> Tuple[np.random.Generator, np.random.Generator]:
+    """(z_rng, u_rng) — the two independent sub-streams of one seed lane."""
+    z_child, u_child = np.random.SeedSequence(seed).spawn(2)
+    return np.random.default_rng(z_child), np.random.default_rng(u_child)
+
+
+def draw_response_chunk(
+    z_rng: np.random.Generator, model: DelayModel, n: int, chunk: int
+) -> np.ndarray:
+    """(chunk, model.n_exp_streams, n) standard exponentials."""
+    return z_rng.standard_exponential((chunk, model.n_exp_streams, n))
+
+
+def draw_key_chunk(
+    u_rng: np.random.Generator, n: int, s: int, chunk: int
+) -> np.ndarray:
+    """(chunk, n, s) uniform batch-selection keys."""
+    return u_rng.random((chunk, n, s))
 
 
 @dataclasses.dataclass
@@ -143,11 +201,17 @@ def simulate(
     analytic schedule (Thm. 2); when given, stages advance at those times
     instead of on the stationarity diagnostic — this isolates the
     strategy's value from diagnostic quality (EXPERIMENTS.md §Paper).
+
+    RNG discipline: this engine is the reference oracle for the batched
+    ``repro.core.vector_sim.simulate_batch``; both consume the chunked
+    two-stream layout documented at the top of this module, so a batched
+    lane run at ``seed`` reproduces this function's trajectory.
     """
-    rng = np.random.default_rng(seed)
+    z_rng, u_rng = spawn_lane_rngs(seed)
     n, s = cfg.n, cfg.s
     if n != problem.n_workers or s != problem.s:
         raise ValueError("cfg (n, s) must match the problem partitioning")
+    chunk = chunk_len(n, s)
 
     ctrl = Controller(
         cfg,
@@ -169,25 +233,37 @@ def simulate(
     it = 0
 
     X, y, eta = problem.X, problem.y, problem.eta
+    E_chunk = U_chunk = None
+    pos = chunk  # forces a draw on the first iteration
 
     for it in range(1, max_iters + 1):
         stage = ctrl.stage
         k, beta = stage.k, stage.beta
         bs = max(int(round(beta * s)), 1)
 
+        if pos == chunk:
+            E_chunk = draw_response_chunk(z_rng, model, n, chunk)
+            U_chunk = draw_key_chunk(u_rng, n, s, chunk)
+            pos = 0
         # Response times for all n workers at this load.
-        z = model.sample(rng, n, beta)
+        z = model.compose(E_chunk[pos], beta)
+        U_it = U_chunk[pos]
+        pos += 1
         order = np.argpartition(z, k - 1)
         fastest = order[:k]
         t += float(z[fastest].max())
 
-        # Partial gradients of the k fastest workers on random local batches.
+        # Partial gradients of the k fastest workers on random local
+        # batches — the bs smallest sort-keys of each worker's row.
         grad = np.zeros_like(w)
         loss_sum = 0.0
         for i in fastest:
             part = problem.partition(int(i))
-            idx = part.start + rng.choice(s, size=bs, replace=False)
-            Xi, yi = X[idx], y[idx]
+            if bs < s:
+                idx = part.start + np.argpartition(U_it[i], bs - 1)[:bs]
+                Xi, yi = X[idx], y[idx]
+            else:
+                Xi, yi = X[part], y[part]
             resid = Xi @ w - yi
             grad += Xi.T @ resid
             loss_sum += float(resid @ resid)

@@ -1,0 +1,515 @@
+"""Seeds-batched, fully vectorized twin of ``repro.core.simulation.simulate``.
+
+Every paper claim is an expectation over simulation seeds, so the
+benchmark layer's hot path is "run the event-driven simulator S times".
+``simulate_batch`` steps all S seed lanes as one ``(S, d)`` weight array:
+response times for all lanes x workers are composed from chunked
+pre-drawn exponentials, the per-worker Python gradient loop becomes a
+masked-residual computation (two small GEMMs per iteration for *all*
+lanes), and the per-seed ``Controller`` objects collapse to a
+precomputed (k, beta) stage table (``repro.core.controller.stage_table``)
+indexed by a per-lane stage pointer plus vectorized diagnostic state.
+
+Equivalence contract (tests/test_vector_sim.py): lane ``i`` of
+``simulate_batch(..., seeds=S)`` reproduces ``simulate(..., seed=i)``
+because both consume the identical per-seed two-stream RNG layout
+documented in ``repro.core.simulation`` (DESIGN.md §9). Trajectories
+match to floating-point roundoff (summation order differs), stage logs
+match exactly.
+
+The scalar engine stays the readable reference oracle; this module is
+the performance path (`benchmarks/perf_sim.py` tracks the speedup).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from .controller import Stage, StrategyConfig, stage_table
+from .delay_models import GeneralizedDelayModel, SimplifiedDelayModel
+from .diagnostics import DiagnosticConfig
+from .order_stats import DelayModel
+from .simulation import (
+    LinregProblem,
+    SimResult,
+    chunk_len,
+    draw_key_chunk,
+    draw_response_chunk,
+    spawn_lane_rngs,
+)
+
+__all__ = ["BatchSimResult", "simulate_batch"]
+
+
+# ---------------------------------------------------------------------------
+# Vectorized per-lane stationarity diagnostics
+#
+# Lane-parallel ports of repro.core.diagnostics; each mirrors the scalar
+# class's update rule exactly (same checkpoints, same truncation, same
+# latches) so per-lane switch decisions agree with a scalar run.
+# ---------------------------------------------------------------------------
+
+
+class _BatchDistanceDiagnostic:
+    """Lane-parallel ``DistanceDiagnostic``."""
+
+    def __init__(self, cfg: DiagnosticConfig, lanes: int, d: int):
+        self.ratio = cfg.ratio
+        self.threshold = cfg.threshold
+        self.min_iters = cfg.min_iters
+        self.consecutive = cfg.consecutive
+        self._anchor = np.zeros((lanes, d))
+        self._has_anchor = np.zeros(lanes, dtype=bool)
+        self._count = np.zeros(lanes, dtype=np.int64)
+        self._next_check = np.zeros(lanes, dtype=np.int64)
+        self._prev_iter = np.ones(lanes, dtype=np.int64)
+        self._prev_omega = np.ones(lanes)
+        self._has_prev = np.zeros(lanes, dtype=bool)
+        self._hits = np.zeros(lanes, dtype=np.int64)
+        self.stationary = np.zeros(lanes, dtype=bool)
+        self.reset_lanes(np.ones(lanes, dtype=bool))
+
+    def reset_lanes(self, m: np.ndarray) -> None:
+        self._has_anchor[m] = False
+        self._count[m] = 0
+        self._next_check[m] = max(self.min_iters, 2)
+        self._has_prev[m] = False
+        self._hits[m] = 0
+        self.stationary[m] = False
+        self._pending_anchor = True
+
+    def observe(self, *, w, grad=None, loss=None, active) -> None:
+        if self._pending_anchor:
+            new_anchor = active & ~self._has_anchor
+            if new_anchor.any():
+                self._anchor[new_anchor] = w[new_anchor]
+                self._has_anchor |= new_anchor
+            self._pending_anchor = bool((~self._has_anchor).any())
+            obs = active & ~new_anchor
+        else:
+            obs = active
+        self._count += obs
+        chk = obs & (self._count >= self._next_check)
+        if not chk.any():
+            return
+        dw = w - self._anchor
+        omega = np.einsum("ld,ld->l", dw, dw)
+        omega = np.where(omega <= 0.0, 1e-300, omega)
+        judged = chk & self._has_prev
+        if judged.any():
+            with np.errstate(divide="ignore", invalid="ignore"):
+                slope = (np.log(omega) - np.log(self._prev_omega)) / (
+                    np.log(self._count) - np.log(self._prev_iter)
+                )
+            hit = judged & (slope < self.threshold)
+            self._hits[hit] += 1
+            self._hits[judged & ~hit] = 0
+            self.stationary[hit & (self._hits >= self.consecutive)] = True
+        self._prev_iter[chk] = self._count[chk]
+        self._prev_omega[chk] = omega[chk]
+        self._has_prev |= chk
+        self._next_check[chk] = np.maximum(
+            self._count + 1, (self._count * self.ratio).astype(np.int64)
+        )[chk]
+
+
+class _BatchPflugDiagnostic:
+    """Lane-parallel ``PflugDiagnostic``."""
+
+    def __init__(self, cfg: DiagnosticConfig, lanes: int, d: int):
+        self.burn_in = cfg.burn_in
+        self._prev_grad = np.zeros((lanes, d))
+        self._has_prev = np.zeros(lanes, dtype=bool)
+        self._stat = np.zeros(lanes)
+        self._count = np.zeros(lanes, dtype=np.int64)
+        self.stationary = np.zeros(lanes, dtype=bool)
+
+    def reset_lanes(self, m: np.ndarray) -> None:
+        self._has_prev[m] = False
+        self._stat[m] = 0.0
+        self._count[m] = 0
+        self.stationary[m] = False
+
+    def observe(self, *, w=None, grad, loss=None, active) -> None:
+        dot = np.einsum("ld,ld->l", self._prev_grad, grad)
+        upd = active & self._has_prev
+        self._stat[upd] += dot[upd]
+        self._prev_grad[active] = grad[active]
+        self._count[active] += 1
+        self._has_prev |= active
+        self.stationary = (self._count >= self.burn_in) & (self._stat < 0.0)
+
+
+class _BatchLossPlateauDiagnostic:
+    """Lane-parallel ``LossPlateauDiagnostic``."""
+
+    def __init__(self, cfg: DiagnosticConfig, lanes: int, d: int):
+        self.fast_a = cfg.fast
+        self.slow_a = cfg.slow
+        self.rel_tol = cfg.rel_tol
+        self.min_iters = cfg.min_iters
+        self.consecutive = cfg.consecutive
+        self._fast = np.zeros(lanes)
+        self._slow = np.zeros(lanes)
+        self._has_init = np.zeros(lanes, dtype=bool)
+        self._count = np.zeros(lanes, dtype=np.int64)
+        self._hits = np.zeros(lanes, dtype=np.int64)
+        self.stationary = np.zeros(lanes, dtype=bool)
+
+    def reset_lanes(self, m: np.ndarray) -> None:
+        self._has_init[m] = False
+        self._count[m] = 0
+        self._hits[m] = 0
+        self.stationary[m] = False
+
+    def observe(self, *, w=None, grad=None, loss, active) -> None:
+        self._count[active] += 1
+        init = active & ~self._has_init
+        if init.any():
+            self._fast[init] = loss[init]
+            self._slow[init] = loss[init]
+            self._has_init |= init
+        rest = active & ~init
+        self._fast[rest] += self.fast_a * (loss - self._fast)[rest]
+        self._slow[rest] += self.slow_a * (loss - self._slow)[rest]
+        eligible = rest & (self._count >= self.min_iters)
+        if not eligible.any():
+            return
+        ratio = (self._slow - self._fast) / (np.abs(self._slow) + 1e-30)
+        hit = eligible & (ratio < self.rel_tol)
+        self._hits[hit] += 1
+        self._hits[eligible & ~hit] = 0
+        self.stationary[hit & (self._hits >= self.consecutive)] = True
+
+
+_BATCH_DIAGNOSTICS = {
+    "distance": _BatchDistanceDiagnostic,
+    "pflug": _BatchPflugDiagnostic,
+    "loss": _BatchLossPlateauDiagnostic,
+}
+
+
+def _make_batch_diagnostic(cfg: DiagnosticConfig, lanes: int, d: int):
+    try:
+        cls = _BATCH_DIAGNOSTICS[cfg.kind]
+    except KeyError:
+        raise ValueError(f"unknown diagnostic kind: {cfg.kind}") from None
+    return cls(cfg, lanes, d)
+
+
+# ---------------------------------------------------------------------------
+# Batched result
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class BatchSimResult:
+    """Per-lane trajectories of one ``simulate_batch`` run.
+
+    Eval-point arrays are ``(lanes, T)`` where ``T`` is the longest lane's
+    record; lane ``i``'s first ``n_evals[i]`` entries are valid (lanes that
+    hit ``target_gap`` early freeze and stop recording). ``lane(i)``
+    reconstructs the scalar-engine ``SimResult`` view.
+    """
+
+    seeds: Tuple[int, ...]
+    times: np.ndarray         # (lanes, T)
+    gaps: np.ndarray          # (lanes, T)
+    comp_at_eval: np.ndarray  # (lanes, T)
+    comm_at_eval: np.ndarray  # (lanes, T)
+    n_evals: np.ndarray       # (lanes,) valid prefix length per lane
+    runtime: np.ndarray       # (lanes,)
+    comp_cost: np.ndarray     # (lanes,)
+    comm_cost: np.ndarray     # (lanes,)
+    iterations: np.ndarray    # (lanes,)
+    reached: np.ndarray       # (lanes,) bool
+    stage_logs: List[List[Tuple[int, Stage]]]
+
+    def __len__(self) -> int:
+        return len(self.seeds)
+
+    def lane(self, i: int) -> SimResult:
+        ne = int(self.n_evals[i])
+        return SimResult(
+            times=self.times[i, :ne].copy(),
+            gaps=self.gaps[i, :ne].copy(),
+            comp_at_eval=self.comp_at_eval[i, :ne].copy(),
+            comm_at_eval=self.comm_at_eval[i, :ne].copy(),
+            runtime=float(self.runtime[i]),
+            comp_cost=float(self.comp_cost[i]),
+            comm_cost=float(self.comm_cost[i]),
+            iterations=int(self.iterations[i]),
+            stage_log=list(self.stage_logs[i]),
+            reached=bool(self.reached[i]),
+        )
+
+    def __iter__(self):
+        return (self.lane(i) for i in range(len(self)))
+
+    def mean_time_to_gap(self, target: float) -> float:
+        vals = [r.time_to_gap(target) for r in self]
+        return float(np.mean(vals))
+
+
+# ---------------------------------------------------------------------------
+# The engine
+# ---------------------------------------------------------------------------
+
+
+def simulate_batch(
+    problem: LinregProblem,
+    cfg: StrategyConfig,
+    model: DelayModel,
+    *,
+    seeds: Union[int, Sequence[int]] = 24,
+    max_iters: int = 200_000,
+    target_gap: Optional[float] = None,
+    eval_every: int = 1,
+    w0: Optional[np.ndarray] = None,
+    estimate_model: bool = False,
+    oracle_switch_times: Optional[list] = None,
+) -> BatchSimResult:
+    """Run ``simulate`` for many seeds at once, vectorized across lanes.
+
+    ``seeds`` is either a lane count (lanes run seeds ``0..seeds-1``, the
+    convention of ``benchmarks.common.mean_curves``) or an explicit seed
+    sequence. All other parameters mirror ``simulate``; lane ``i``
+    reproduces ``simulate(..., seed=seeds[i])`` (same RNG streams, same
+    stage decisions, trajectories equal to FP roundoff).
+    """
+    if estimate_model:
+        raise ValueError(
+            "online model estimation is sequential per lane; use the scalar "
+            "simulate(estimate_model=True) reference engine for it"
+        )
+    seed_list: Tuple[int, ...] = (
+        tuple(range(seeds)) if isinstance(seeds, (int, np.integer)) else tuple(seeds)
+    )
+    L = len(seed_list)
+    if L == 0:
+        raise ValueError("need at least one seed lane")
+    n, s = cfg.n, cfg.s
+    if n != problem.n_workers or s != problem.s:
+        raise ValueError("cfg (n, s) must match the problem partitioning")
+
+    X, y, eta = problem.X, problem.y, problem.eta
+    v, d = problem.v, problem.d
+    XT = np.ascontiguousarray(X.T)
+    f_star = problem.f_star
+
+    # -- stage table + per-lane stage state ---------------------------------
+    table = stage_table(cfg, model)
+    T = len(table)
+    k_tab = np.array([st.k for st in table], dtype=np.int64)
+    beta_tab = np.array([st.beta for st in table])
+    bs_tab = np.maximum(np.rint(beta_tab * s).astype(np.int64), 1)
+    stage_idx = np.zeros(L, dtype=np.int64)
+    terminal = np.zeros(L, dtype=bool)
+
+    k_lane = np.empty(L, dtype=np.int64)
+    beta_lane = np.empty(L)
+    bs_lane = np.empty(L, dtype=np.int64)
+    gcoef = np.empty(L)      # 2 / (k * bs)
+    comp_inc = np.empty(L)   # beta * s
+    comm_inc = np.empty(L)   # n + k
+
+    # Inline response-time composition (``model.compose`` unrolled with the
+    # per-lane load factors precomputed at each stage change; same float
+    # ops as the scalar path, so values match bitwise).
+    is_simple = isinstance(model, SimplifiedDelayModel)
+    is_general = isinstance(model, GeneralizedDelayModel)
+    comp_scale = np.empty((L, 1))  # beta / lambda_y
+    shift_lane = np.empty((L, 1))  # generalized: x + y * beta
+    # Per-iteration batch-subsampling state (bs < s for any lane):
+    any_subsample = False
+    bs_m1_col = np.empty((L, 1), dtype=np.int64)
+    lane_col = np.arange(L)[:, None]
+    worker_row = np.arange(n)[None, :]
+
+    def regather_stages() -> None:
+        nonlocal any_subsample
+        k_lane[:] = k_tab[stage_idx]
+        beta_lane[:] = beta_tab[stage_idx]
+        bs_lane[:] = bs_tab[stage_idx]
+        gcoef[:] = 2.0 / (k_lane * bs_lane)
+        comp_inc[:] = beta_lane * s
+        comm_inc[:] = float(n) + k_lane
+        comp_scale[:, 0] = beta_lane / model.lambda_y
+        if is_general:
+            shift_lane[:, 0] = model.x + model.y * beta_lane
+        any_subsample = bool((bs_lane < s).any())
+        bs_m1_col[:, 0] = bs_lane - 1
+
+    regather_stages()
+
+    # -- diagnostics / oracle switching -------------------------------------
+    adaptive = cfg.strategy not in ("naive", "fastest_k")
+    use_oracle = oracle_switch_times is not None
+    diag = None
+    if adaptive and not use_oracle:
+        diag = _make_batch_diagnostic(cfg.diagnostic, L, d)
+    needs_loss = diag is not None and isinstance(diag, _BatchLossPlateauDiagnostic)
+    if use_oracle:
+        ost = np.asarray(list(oracle_switch_times), dtype=np.float64)
+        n_ost = ost.size
+    stage_logs: List[List[Tuple[int, Stage]]] = [[(0, table[0])] for _ in range(L)]
+
+    def advance_lanes(mask: np.ndarray, it: int) -> bool:
+        """Mirror ``Controller.advance`` for the masked lanes."""
+        at_end = mask & (stage_idx >= T - 1)
+        terminal[at_end] = True
+        adv = mask & ~at_end
+        if not adv.any():
+            return False
+        stage_idx[adv] += 1
+        for lane in np.nonzero(adv)[0]:
+            stage_logs[lane].append((it, table[stage_idx[lane]]))
+        if diag is not None:
+            diag.reset_lanes(adv)
+        return True
+
+    # -- per-lane weights and accumulators ----------------------------------
+    if w0 is None:
+        w = np.zeros((L, d))
+    else:
+        w0 = np.asarray(w0, dtype=np.float64)
+        w = np.broadcast_to(w0, (L, d)).copy() if w0.ndim == 1 else w0.copy()
+        if w.shape != (L, d):
+            raise ValueError(f"w0 must broadcast to {(L, d)}, got {w0.shape}")
+    t = np.zeros(L)
+    comp = np.zeros(L)
+    comm = np.zeros(L)
+    active = np.ones(L, dtype=bool)
+    reached = np.zeros(L, dtype=bool)
+    iterations = np.zeros(L, dtype=np.int64)
+    n_evals = np.ones(L, dtype=np.int64)
+
+    r_buf = np.empty((L, v))
+    lane_ar = np.arange(L)
+
+    def gap_all() -> np.ndarray:
+        np.matmul(w, XT, out=r_buf)
+        np.subtract(r_buf, y, out=r_buf)
+        return np.einsum("lv,lv->l", r_buf, r_buf) / v - f_star
+
+    times_rec = [np.zeros(L)]
+    gaps_rec = [gap_all()]
+    comps_rec = [np.zeros(L)]
+    comms_rec = [np.zeros(L)]
+
+    # -- chunked per-lane RNG streams (shared layout with the scalar engine)
+    chunk = chunk_len(n, s)
+    rngs = [spawn_lane_rngs(sd) for sd in seed_list]
+    E_buf = np.empty((chunk, L, model.n_exp_streams, n))
+    U_buf = np.empty((chunk, L, n, s))
+    pos = chunk
+
+    for it in range(1, max_iters + 1):
+        if pos == chunk:
+            for lane in np.nonzero(active)[0]:
+                z_rng, u_rng = rngs[lane]
+                E_buf[:, lane] = draw_response_chunk(z_rng, model, n, chunk)
+                U_buf[:, lane] = draw_key_chunk(u_rng, n, s, chunk)
+            pos = 0
+        E_it = E_buf[pos]
+        U_it = U_buf[pos]
+        pos += 1
+
+        np.copyto(iterations, it, where=active)
+
+        # Response times, k-th order statistic, fastest-k mask.
+        if is_simple:
+            z = model.shift + comp_scale * E_it[:, 0, :]
+        elif is_general:
+            z = shift_lane + E_it[:, 0, :] / model.lambda_x + comp_scale * E_it[:, 1, :]
+        else:
+            z = model.compose(E_it, beta_lane[:, None])
+        zs = np.sort(z, axis=1)
+        kth = zs[lane_ar, k_lane - 1]
+        np.add(t, kth, out=t, where=active)
+        fast = z <= kth[:, None]
+
+        # Batch-selection mask: worker i contributes its bs smallest-key
+        # samples. One row-sort covers every lane's bs (cheaper than any
+        # per-bs partition at these row lengths); rows with bs == s
+        # threshold at the row max, selecting everything.
+        if any_subsample:
+            Us = np.sort(U_it, axis=-1)
+            thr = Us[lane_col, worker_row, bs_m1_col]
+            Mb = ((U_it <= thr[:, :, None]) & fast[:, :, None]).reshape(L, v)
+        else:
+            Mb = np.repeat(fast, s, axis=1)
+
+        # Gradient of all lanes: residuals on the full data, masked to the
+        # selected samples, contracted back through X (two small GEMMs).
+        np.matmul(w, XT, out=r_buf)
+        np.subtract(r_buf, y, out=r_buf)
+        Mr = np.where(Mb, r_buf, 0.0)
+        grad = Mr @ X
+        grad *= gcoef[:, None]
+        np.subtract(w, eta * grad, out=w, where=active[:, None])
+
+        np.add(comp, comp_inc, out=comp, where=active)
+        np.add(comm, comm_inc, out=comm, where=active)
+
+        # Stage control: diagnostics or oracle switch times.
+        dirty = False
+        if diag is not None:
+            loss = (
+                np.einsum("lv,lv->l", Mr, r_buf) * (gcoef / 2.0)
+                if needs_loss
+                else None
+            )
+            diag.observe(w=w, grad=grad, loss=loss, active=active)
+            fired = diag.stationary & active & ~terminal
+            if fired.any():
+                dirty = advance_lanes(fired, it)
+        elif use_oracle and n_ost > 0:
+            while True:
+                idx_c = np.minimum(stage_idx, max(n_ost - 1, 0))
+                due = (
+                    active
+                    & ~terminal
+                    & (stage_idx < n_ost)
+                    & (t >= ost[idx_c])
+                )
+                if not due.any():
+                    break
+                if not advance_lanes(due, it):
+                    break
+                dirty = True
+        if dirty:
+            regather_stages()
+
+        if it % eval_every == 0:
+            g = gap_all()
+            times_rec.append(t.copy())
+            gaps_rec.append(np.where(active, g, gaps_rec[-1]))
+            comps_rec.append(comp.copy())
+            comms_rec.append(comm.copy())
+            n_evals[active] += 1
+            if target_gap is not None:
+                done = active & (g <= target_gap)
+                if done.any():
+                    reached |= done
+                    active &= ~done
+                    if not active.any():
+                        break
+
+    return BatchSimResult(
+        seeds=seed_list,
+        times=np.stack(times_rec, axis=1),
+        gaps=np.stack(gaps_rec, axis=1),
+        comp_at_eval=np.stack(comps_rec, axis=1),
+        comm_at_eval=np.stack(comms_rec, axis=1),
+        n_evals=n_evals,
+        runtime=t,
+        comp_cost=comp,
+        comm_cost=comm,
+        iterations=iterations,
+        reached=reached,
+        stage_logs=stage_logs,
+    )

@@ -1,0 +1,39 @@
+"""Light checks on the benchmark plumbing (no figure runs)."""
+
+import json
+import time
+
+import numpy as np
+
+
+def test_timer_uses_perf_counter(monkeypatch):
+    from benchmarks.common import Timer
+
+    # time.time is frozen; a monotonic perf_counter-based Timer still
+    # measures elapsed wall clock.
+    monkeypatch.setattr(time, "time", lambda: 0.0)
+    with Timer() as t:
+        time.sleep(0.01)
+    assert t.elapsed > 0.0
+
+
+def test_run_jsonable_roundtrip():
+    from benchmarks.run import _jsonable
+
+    payload = {
+        "f": np.float64(1.5),
+        "i": np.int64(3),
+        "arr": np.array([1.0, 2.0]),
+        "inf": float("inf"),
+        "nan": float("nan"),
+        "tup": (1, (2, 3)),
+        "stage": None,
+    }
+    out = _jsonable(payload)
+    text = json.dumps(out)  # must be strictly serializable
+    back = json.loads(text)
+    assert back["f"] == 1.5 and back["i"] == 3
+    assert back["arr"] == [1.0, 2.0]
+    assert back["inf"] == "inf" and back["nan"] == "nan"
+    assert back["tup"] == [1, [2, 3]]
+    assert back["stage"] is None
