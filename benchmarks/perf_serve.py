@@ -1,0 +1,186 @@
+"""Serving perf: static batching vs continuous batching.
+
+Drives ``repro.serve.ServeEngine`` and the ``run_static`` baseline over
+identical synthetic workloads (Poisson arrivals, mixed prompt lengths
+and generation budgets, fixed seeds) on the smallest registered config
+and writes ``BENCH_serve.json``. Two clocks are reported:
+
+  * the deterministic event clock (``*_vsec``) — latency p50/p99 and the
+    headline aggregate tokens/s comparison, exact and CI-stable (both
+    engines run the same fixed-shape jit calls, so the cost model's
+    per-call pricing is the honest comparison);
+  * wall time (``*_wsec``) — the sanity check that the virtual win is
+    real on the machine at hand.
+
+Continuous batching wins by refilling freed slots immediately: static
+batching burns decode ticks on lanes whose request already finished
+while the longest one in the batch drags on, and the gap widens with the
+arrival rate and with the spread of per-request token budgets.
+
+    PYTHONPATH=src python -m benchmarks.perf_serve [--full] [--out PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import time
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serve import ServeEngine, run_static
+
+DEFAULT_OUT = "BENCH_serve.json"
+
+ARCH = "smollm"        # smallest registered config
+N_SLOTS = 4
+MAX_LEN = 96
+SEED = 7
+
+
+def make_workload(
+    n_requests: int, rate: float, vocab: int, seed: int = SEED
+) -> List[Tuple[np.ndarray, int, float]]:
+    """Poisson arrivals at ``rate`` req/vsec; prompt len 4-23, generation
+    budget 2-55 (wide spread — the regime where dead static lanes hurt)."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    t = 0.0
+    for _ in range(n_requests):
+        p_len = int(rng.integers(4, 24))
+        n_new = int(rng.integers(2, 56))
+        n_new = min(n_new, MAX_LEN - p_len)
+        t += float(rng.exponential(1.0 / rate))
+        prompt = rng.integers(0, vocab, size=p_len).astype(np.int32)
+        reqs.append((prompt, n_new, t))
+    return reqs
+
+
+def _latencies(results) -> np.ndarray:
+    return np.array([r.latency for r in results.values()])
+
+
+def measure_rate(model, params, rate: float, n_requests: int) -> dict:
+    reqs = make_workload(n_requests, rate, model.cfg.vocab_size)
+
+    eng = ServeEngine(model, params, n_slots=N_SLOTS, max_len=MAX_LEN)
+    for prompt, m, arr in reqs:
+        eng.submit(prompt, m, arrival=arr)
+    t0 = time.perf_counter()
+    cont_results = eng.run()
+    cont_wall = time.perf_counter() - t0
+    cont = eng.stats
+
+    t0 = time.perf_counter()
+    stat_results, stat = run_static(
+        model, params, reqs, n_slots=N_SLOTS, max_len=MAX_LEN
+    )
+    stat_wall = time.perf_counter() - t0
+
+    lc, ls = _latencies(cont_results), _latencies(stat_results)
+    return {
+        "arrival_rate_per_vsec": rate,
+        "requests": n_requests,
+        "continuous": {
+            "decode_ticks": cont.decode_ticks,
+            "generated_tokens": cont.generated_tokens,
+            "tokens_per_vsec": round(cont.tokens_per_vsec, 2),
+            "tokens_per_wsec": round(cont.generated_tokens / max(cont_wall, 1e-9), 2),
+            "latency_p50_vsec": round(float(np.percentile(lc, 50)), 5),
+            "latency_p99_vsec": round(float(np.percentile(lc, 99)), 5),
+        },
+        "static": {
+            "decode_ticks": stat.decode_ticks,
+            "generated_tokens": stat.generated_tokens,
+            "tokens_per_vsec": round(stat.tokens_per_vsec, 2),
+            "tokens_per_wsec": round(stat.generated_tokens / max(stat_wall, 1e-9), 2),
+            "latency_p50_vsec": round(float(np.percentile(ls, 50)), 5),
+            "latency_p99_vsec": round(float(np.percentile(ls, 99)), 5),
+        },
+        "throughput_gain_vsec": round(
+            cont.tokens_per_vsec / max(stat.tokens_per_vsec, 1e-12), 3
+        ),
+    }
+
+
+def hedging_summary() -> dict:
+    """Rider metric: what order-statistics hedging buys the router.
+
+    Expected completion time of a single replica vs the priced optimal
+    hedge, under the paper's simplified delay model (§10)."""
+    from repro.core.delay_models import SimplifiedDelayModel
+    from repro.serve import HedgedRouter
+
+    model = SimplifiedDelayModel(lambda_y=2.0, x=0.05)
+    router = HedgedRouter(model, 8, quorum=1, cost_per_replica=0.08)
+    plan = router.choose_hedge()
+    single = router.hedge_cost(1)
+    return {
+        "delay_model": "simplified(lambda_y=2.0, x=0.05)",
+        "cost_per_replica": 0.08,
+        "chosen_fanout": plan.n_h,
+        "single_replica_cost": round(single, 4),
+        "hedged_cost": round(plan.expected_cost, 4),
+        "hedge_gain": round(single / plan.expected_cost, 3),
+    }
+
+
+def run(fast: bool = True, out: Optional[str] = None) -> dict:
+    import jax
+
+    cfg = get_config(ARCH).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    n_requests = 12 if fast else 48
+    rates = (20.0, 200.0) if fast else (20.0, 80.0, 400.0)
+
+    # Warm the jit caches so wall numbers compare steady-state execution.
+    warm = ServeEngine(model, params, n_slots=N_SLOTS, max_len=MAX_LEN)
+    warm.submit(np.arange(5, dtype=np.int32), 3)
+    warm.run()
+
+    points = []
+    print(f"{'rate':>8s} {'cont tok/vs':>12s} {'stat tok/vs':>12s} {'gain':>6s} "
+          f"{'cont p99':>9s} {'stat p99':>9s}")
+    for rate in rates:
+        r = measure_rate(model, params, rate, n_requests)
+        points.append(r)
+        c, s = r["continuous"], r["static"]
+        print(f"{rate:8.0f} {c['tokens_per_vsec']:12.1f} {s['tokens_per_vsec']:12.1f} "
+              f"{r['throughput_gain_vsec']:5.2f}x {c['latency_p99_vsec']:9.4f} "
+              f"{s['latency_p99_vsec']:9.4f}")
+
+    payload = {
+        "benchmark": "perf_serve",
+        "mode": "fast" if fast else "full",
+        "arch": cfg.name,
+        "n_slots": N_SLOTS,
+        "max_len": MAX_LEN,
+        "machine": platform.machine(),
+        "python": platform.python_version(),
+        "points": points,
+        "hedging": hedging_summary(),
+    }
+    if out is not None:
+        with open(out, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {out}")
+    return payload
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="more requests and arrival rates")
+    ap.add_argument("--out", type=str, default=DEFAULT_OUT, metavar="PATH")
+    args = ap.parse_args()
+    run(fast=not args.full, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

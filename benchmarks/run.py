@@ -55,7 +55,7 @@ def main() -> None:
     fast = not args.full
 
     from . import fig1_3_theory, fig4_simulation, fig5to7_general_model
-    from . import fig8to9_costs, perf_sim, roofline_report
+    from . import fig8to9_costs, perf_serve, perf_sim, roofline_report
 
     benches = {
         "fig1_3_theory": fig1_3_theory.run,
@@ -63,6 +63,7 @@ def main() -> None:
         "fig5to7_general_model": fig5to7_general_model.run,
         "fig8to9_costs": fig8to9_costs.run,
         "perf_sim": perf_sim.run,
+        "perf_serve": perf_serve.run,
         "roofline_report": roofline_report.run,
     }
     if args.only:

@@ -1,9 +1,12 @@
-"""Serving demo: batched autoregressive decode with KV/SSM caches.
+"""Serving demo: continuous-batching engine over the slot-pooled caches.
 
-Runs prefill on a batch of prompts then decodes N tokens per sequence,
-exercising the same decode_step the dry-run lowers at 32k/500k. Works for
-every registered arch family (attention KV caches, MLA latent caches,
-SSM/xLSTM recurrent states).
+Submits a stream of staggered requests to ``repro.serve.ServeEngine``,
+which admits each one with the real batched cache-writing prefill
+(``model.prefill_with_cache`` via ``make_slot_prefill_step`` — one
+projection for the whole prompt, not a token-by-token loop) and decodes
+all live slots in a single fixed-shape jit call per tick. Works for
+every registered causal arch family (attention KV caches, MLA latent
+caches, SSM/xLSTM recurrent states).
 
     PYTHONPATH=src python examples/serve_lm.py --arch xlstm --tokens 32
 """
@@ -12,19 +15,23 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config
 from repro.models import build_model
-from repro.models.layers import init_from_specs
+from repro.serve import ServeEngine, Scheduler
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--tokens", type=int, default=24)
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="split long prompts into chunks this size "
+                         "(bounds how long one admission stalls decoding)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
@@ -32,37 +39,35 @@ def main():
     rng = jax.random.PRNGKey(0)
     params = model.init(rng)
 
-    B, P, N = args.batch, args.prompt_len, args.tokens
-    max_len = P + N + 1
-    prompts = jax.random.randint(rng, (B, P), 0, cfg.vocab_size)
-    caches = init_from_specs(rng, model.cache_specs(B, max_len))
+    max_len = args.prompt_len + args.tokens + 1
+    engine = ServeEngine(
+        model, params, n_slots=args.slots, max_len=max_len,
+        scheduler=Scheduler(args.slots, prefill_chunk=args.prefill_chunk),
+    )
 
-    decode = jax.jit(model.decode_step)
+    host_rng = np.random.default_rng(0)
+    for i in range(args.requests):
+        plen = int(host_rng.integers(max(args.prompt_len // 2, 1), args.prompt_len + 1))
+        prompt = host_rng.integers(0, cfg.vocab_size, size=plen).astype(np.int32)
+        ntok = int(host_rng.integers(max(args.tokens // 2, 1), args.tokens + 1))
+        engine.submit(prompt, ntok, arrival=i * 1e-3)
 
-    # Prefill by stepping the prompt through the decode path (fills the
-    # caches exactly; the batched prefill kernel is the dry-run's job).
-    t0 = time.time()
-    logits = None
-    for t in range(P):
-        logits, caches = decode(params, prompts[:, t : t + 1], caches, jnp.int32(t))
-    t_prefill = time.time() - t0
+    t0 = time.perf_counter()
+    results = engine.run()
+    wall = time.perf_counter() - t0
 
-    # Greedy decode.
-    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
-    out_tokens = [tok]
-    t0 = time.time()
-    for t in range(P, P + N):
-        logits, caches = decode(params, tok, caches, jnp.int32(t))
-        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
-        out_tokens.append(tok)
-    dt = time.time() - t0
-
-    gen = jnp.concatenate(out_tokens, axis=1)
-    print(f"arch={cfg.name} batch={B} prompt={P} new_tokens={N}")
-    print(f"prefill {t_prefill:.2f}s, decode {dt:.2f}s "
-          f"({B * N / max(dt, 1e-9):.1f} tok/s on CPU interpret)")
-    for b in range(min(B, 2)):
-        print(f"  seq{b}: {list(map(int, gen[b][:16]))} ...")
+    s = engine.stats
+    print(f"arch={cfg.name} slots={args.slots} requests={args.requests} "
+          f"max_len={max_len}")
+    print(f"prefill: {s.prefill_calls} calls / {s.prefill_tokens} tokens; "
+          f"decode: {s.decode_ticks} ticks")
+    print(f"generated {s.generated_tokens} tokens in {wall:.2f}s wall "
+          f"({s.generated_tokens / max(wall, 1e-9):.1f} tok/s on CPU) — "
+          f"{s.tokens_per_vsec:.1f} tok/s virtual")
+    for rid in sorted(results)[:2]:
+        r = results[rid]
+        print(f"  req{rid}: prompt={r.prompt_len} new={len(r.tokens)} "
+              f"latency={r.latency:.4f}v  {r.tokens[:12]} ...")
 
 
 if __name__ == "__main__":

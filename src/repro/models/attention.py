@@ -28,6 +28,24 @@ from .layers import ParamSpec, apply_rope, norm_apply, norm_specs
 NEG_INF = -1e30
 
 
+def cache_row_update(cache: jax.Array, new: jax.Array, idx: jax.Array) -> jax.Array:
+    """Write ``new`` (B, S_new, ...) into ``cache`` (B, S, ...) at sequence
+    offset ``idx`` — scalar (all rows share one write position: classic
+    decode) or per-row ``(B,)`` (slot-pooled serving, where every sequence
+    in the batch sits at its own length)."""
+    new = new.astype(cache.dtype)
+    if jnp.ndim(idx) == 0:
+        return jax.lax.dynamic_update_slice_in_dim(cache, new, idx, axis=1)
+    return jax.vmap(
+        lambda c, n, i: jax.lax.dynamic_update_slice_in_dim(c, n, i, axis=0)
+    )(cache, new, idx)
+
+
+def decode_lengths(idx: jax.Array, batch: int) -> jax.Array:
+    """Valid-prefix lengths (B,) after writing one token at ``idx``."""
+    return jnp.broadcast_to(idx + 1, (batch,)).astype(jnp.int32)
+
+
 # ---------------------------------------------------------------------------
 # GQA specs
 # ---------------------------------------------------------------------------
@@ -184,14 +202,40 @@ def gqa_apply(
             out = mea_attention(q, k, v, causal=causal, chunk=cfg.attn_chunk)
         new_cache = None
     else:
-        idx = cache_index  # scalar int32: write position
-        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, idx, axis=1)
-        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, idx, axis=1)
-        length = jnp.full((x.shape[0],), idx + 1, jnp.int32)
-        out = decode_attention(q, ck, cv, length=length)
+        idx = cache_index  # int32 write position: scalar or per-row (B,)
+        ck = cache_row_update(cache["k"], k, idx)
+        cv = cache_row_update(cache["v"], v, idx)
+        out = decode_attention(q, ck, cv, length=decode_lengths(idx, x.shape[0]))
         new_cache = {"k": ck, "v": cv}
     y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
     return y, new_cache
+
+
+def gqa_prefill(
+    params: Dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    positions: jax.Array,
+    cache: Dict,
+    start_index: jax.Array,
+) -> Tuple[jax.Array, Dict]:
+    """Cache-writing batched prefill: project the whole (B, S) chunk once,
+    write its K/V rows at ``start_index``, and attend causally against the
+    cache (rows past the chunk are masked by causality, rows before it are
+    an earlier chunk's prefix — chunked-prefill continuation is free)."""
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    ck = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k.astype(cache["k"].dtype), start_index, axis=1
+    )
+    cv = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v.astype(cache["v"].dtype), start_index, axis=1
+    )
+    out = mea_attention(
+        q, ck, cv, causal=True, chunk=cfg.attn_chunk, q_offset=start_index
+    )
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, {"k": ck, "v": cv}
 
 
 def gqa_cache_spec(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, ParamSpec]:
@@ -282,14 +326,12 @@ def mla_apply(
 
     # Decode: cache holds the LATENT stream (B, S, r_kv) + rope keys.
     idx = cache_index
-    c_ckv = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv, idx, axis=1)
-    c_rope = jax.lax.dynamic_update_slice_in_dim(
-        cache["k_rope"], k_rope[:, :, 0, :], idx, axis=1
-    )
+    c_ckv = cache_row_update(cache["ckv"], ckv, idx)
+    c_rope = cache_row_update(cache["k_rope"], k_rope[:, :, 0, :], idx)
     new_cache = {"ckv": c_ckv, "k_rope": c_rope}
     S = c_ckv.shape[1]
-    length = idx + 1
-    pos_mask = jnp.arange(S)[None, :] < length
+    length = decode_lengths(idx, B)
+    pos_mask = jnp.arange(S)[None, :] < length[:, None]
 
     if absorb:
         # q_nope absorbed through W_UK: scores in latent space, rank r_kv.
@@ -325,6 +367,40 @@ def mla_apply(
 
     y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
     return y, new_cache
+
+
+def mla_prefill(
+    params: Dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    positions: jax.Array,
+    cache: Dict,
+    start_index: jax.Array,
+) -> Tuple[jax.Array, Dict]:
+    """Cache-writing batched MLA prefill: write the latent stream for the
+    whole chunk, then attend via the expanded path (see ``gqa_prefill``)."""
+    m: MLAConfig = cfg.mla
+    q_nope, q_rope, ckv, k_rope = _mla_qkv(params, x, cfg, positions)
+    c_ckv = jax.lax.dynamic_update_slice_in_dim(
+        cache["ckv"], ckv.astype(cache["ckv"].dtype), start_index, axis=1
+    )
+    c_rope = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], k_rope[:, :, 0, :].astype(cache["k_rope"].dtype),
+        start_index, axis=1,
+    )
+    k_nope, v = _mla_expand_kv(params, c_ckv, cfg)
+    B, S, H = x.shape[0], c_ckv.shape[1], cfg.n_heads
+    k_rope_b = jnp.broadcast_to(
+        c_rope[:, :, None, :], (B, S, H, m.qk_rope_head_dim)
+    )
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    out = mea_attention(
+        q_full, k_full, v, causal=True, chunk=cfg.attn_chunk, q_offset=start_index
+    )
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, {"ckv": c_ckv, "k_rope": c_rope}
 
 
 def mla_cache_spec(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, ParamSpec]:

@@ -29,6 +29,12 @@ __all__ = [
     "init_from_specs",
     "abstract_from_specs",
     "count_specs",
+    "batch_axis_of",
+    "slot_read",
+    "slot_write",
+    "slot_reset",
+    "slot_take",
+    "slot_mask_select",
     "rms_norm",
     "layer_norm",
     "norm_apply",
@@ -107,6 +113,75 @@ def abstract_from_specs(specs, sharding_for: Callable[[ParamSpec], object]):
 def count_specs(specs) -> int:
     leaves = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, ParamSpec))
     return sum(s.size for s in leaves)
+
+
+# ---------------------------------------------------------------------------
+# Slot-indexed cache helpers (repro.serve)
+#
+# Serving caches are pytrees whose leaves each carry an "act_batch" axis —
+# NOT always the leading one (stacked-layer segments and the zamba shared
+# block put "layers" first). The spec tree is the source of truth for
+# where the slot axis lives and what a freshly reset slot contains
+# (``init`` is "zeros" for KV rows but "ones" for e.g. the sLSTM
+# normalizer), so every helper here walks (values, specs) together.
+# ---------------------------------------------------------------------------
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def batch_axis_of(spec: ParamSpec) -> int:
+    """Index of the slot ("act_batch") axis of a cache leaf."""
+    return spec.axes.index("act_batch")
+
+
+def slot_read(caches, specs, slot) -> "jax.Array":
+    """Extract one slot as a batch-1 cache pytree (for chunked prefill
+    continuation: read the slot, extend it, write it back)."""
+    def read(c, s):
+        ax = batch_axis_of(s)
+        return jax.lax.dynamic_slice_in_dim(c, slot, 1, axis=ax)
+    return jax.tree.map(read, caches, specs, is_leaf=_is_spec)
+
+
+def slot_write(caches, specs, slot, slot_caches):
+    """Write a batch-1 cache pytree into slot ``slot`` of a pooled cache."""
+    def write(c, s, v):
+        ax = batch_axis_of(s)
+        return jax.lax.dynamic_update_slice_in_dim(c, v.astype(c.dtype), slot, axis=ax)
+    return jax.tree.map(write, caches, specs, slot_caches, is_leaf=_is_spec)
+
+
+def slot_reset(caches, specs, slot):
+    """Restore one slot to its spec-defined initial value (zeros/ones)."""
+    def reset(c, s):
+        ax = batch_axis_of(s)
+        shape = list(c.shape)
+        shape[ax] = 1
+        fill = jnp.ones if s.init == "ones" else jnp.zeros
+        return jax.lax.dynamic_update_slice_in_dim(
+            c, fill(shape, c.dtype), slot, axis=ax
+        )
+    return jax.tree.map(reset, caches, specs, is_leaf=_is_spec)
+
+
+def slot_take(caches, specs, perm):
+    """Permute slots (defrag: compact live slots to the low indices)."""
+    def take(c, s):
+        return jnp.take(c, perm, axis=batch_axis_of(s))
+    return jax.tree.map(take, caches, specs, is_leaf=_is_spec)
+
+
+def slot_mask_select(mask, new_caches, old_caches, specs):
+    """Per-slot select: where ``mask`` (n_slots,) is True take the new
+    leaf rows, else keep the old — the serving analogue of the fastest-k
+    ``worker_mask`` (occupancy enters as data, shapes never change)."""
+    def sel(n, o, s):
+        ax = batch_axis_of(s)
+        shape = [1] * n.ndim
+        shape[ax] = n.shape[ax]
+        return jnp.where(mask.reshape(shape), n, o.astype(n.dtype))
+    return jax.tree.map(sel, new_caches, old_caches, specs, is_leaf=_is_spec)
 
 
 # ---------------------------------------------------------------------------

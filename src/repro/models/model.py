@@ -27,6 +27,7 @@ from .layers import (
     mlp_apply,
     norm_apply,
     norm_specs,
+    slot_mask_select,
 )
 from .transformer import Segment, block_apply, run_segments, segment_plan, stack_specs
 
@@ -85,6 +86,55 @@ def _block_decode(
         y, new_state = xlstm.slstm_apply(params["mixer"], h, cfg, state=cache)
         return x + y, new_state
     raise ValueError(f"no decode for block kind {kind}")
+
+
+#: block kinds with a fused multi-token cache-writing prefill. Recurrent
+#: kinds (mlstm/slstm/mamba) prefill through the masked decode scan instead.
+_FUSED_PREFILL_KINDS = ("dense", "parallel", "moe", "mla_dense", "mla_moe")
+
+
+def _block_prefill(
+    params: Dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    kind: str,
+    *,
+    positions: jax.Array,
+    cache: Dict,
+    start_index: jax.Array,
+) -> Tuple[jax.Array, Dict]:
+    """Multi-token block forward that also writes the block's cache rows
+    (the serving prefill; mirrors ``_block_decode`` with S > 1)."""
+    if kind in ("dense", "parallel", "moe"):
+        h = norm_apply(params["attn_norm"], x, cfg.norm)
+        a, new_cache = attn.gqa_prefill(
+            params["attn"], h, cfg, positions=positions,
+            cache=cache, start_index=start_index,
+        )
+        if kind == "parallel":
+            f = mlp_apply(params["ffn"], h, cfg.act, cfg.glu)
+            return x + a + f, new_cache
+        x = x + a
+        h = norm_apply(params["mlp_norm"], x, cfg.norm)
+        if kind == "moe":
+            f, _ = moe.moe_apply(params["ffn"], h, cfg)
+        else:
+            f = mlp_apply(params["ffn"], h, cfg.act, cfg.glu)
+        return x + f, new_cache
+    if kind in ("mla_dense", "mla_moe"):
+        h = norm_apply(params["attn_norm"], x, cfg.norm)
+        a, new_cache = attn.mla_prefill(
+            params["attn"], h, cfg, positions=positions,
+            cache=cache, start_index=start_index,
+        )
+        x = x + a
+        h = norm_apply(params["mlp_norm"], x, cfg.norm)
+        if kind == "mla_moe":
+            f, _ = moe.moe_apply(params["ffn"], h, cfg)
+        else:
+            f = mlp_apply(params["ffn"], h, cfg.act, cfg.glu)
+        return x + f, new_cache
+    raise ValueError(f"no fused prefill for block kind {kind}")
 
 
 def _block_cache_specs(
@@ -265,25 +315,117 @@ class Model:
             out.append(single)
         return out
 
+    def blank_caches(self, batch: int, max_len: int):
+        """Freshly initialized caches (cache specs are deterministic
+        zeros/ones fills, so no meaningful randomness is consumed)."""
+        return init_from_specs(jax.random.PRNGKey(0), self.cache_specs(batch, max_len))
+
+    @functools.cached_property
+    def fused_prefill(self) -> bool:
+        """True when every block has a multi-token cache-writing prefill
+        (pure-attention stacks); recurrent/hybrid stacks fall back to the
+        masked decode scan in ``prefill_with_cache``."""
+        if self.cfg.family in ("ssm", "hybrid"):
+            return False
+        return all(seg.kind in _FUSED_PREFILL_KINDS for seg in self.segments)
+
     def prefill(self, params: Dict, inputs: jax.Array) -> jax.Array:
-        """Prefill forward -> logits for the last position (cache writing is
-        fused into decode for simplicity of the serving API; the dry-run
-        lowers this as the prefill compute)."""
+        """Prefill forward -> logits for the last position (no cache
+        writing — the dry-run lowers this as the prefill compute; serving
+        uses ``prefill_with_cache``)."""
         S = inputs.shape[1]
         positions = jnp.arange(S)
         h, _ = self.hidden(params, inputs, positions)
         return self.logits(params, h[:, -1:, :])
+
+    def prefill_with_cache(
+        self,
+        params: Dict,
+        inputs: jax.Array,                     # (B, P) int32, right-padded
+        caches,
+        length: Optional[jax.Array] = None,    # (B,) valid tokens per row
+        start_index: jax.Array = 0,            # scalar: first write position
+    ):
+        """Batched cache-writing prefill -> (last-valid logits (B,1,V), caches).
+
+        ``inputs`` may be right-padded to a bucket size; ``length`` marks
+        each row's true token count. Attention stacks run the fused path
+        (one projection for the whole chunk; pad rows are causally inert
+        and their stale cache rows are masked by decode's length mask).
+        Recurrent/hybrid stacks scan the decode step with per-row update
+        masking so pad tokens never touch the state. ``start_index > 0``
+        continues a partially prefilled cache (chunked prefill)."""
+        cfg = self.cfg
+        B, P = inputs.shape
+        start_index = jnp.asarray(start_index, jnp.int32)
+        if length is None:
+            length = jnp.full((B,), P, jnp.int32)
+
+        if self.fused_prefill:
+            positions = start_index + jnp.arange(P)
+            x = self.embed_inputs(params, inputs)
+            new_caches = []
+            h = x
+            for seg_params, seg_cache, seg in zip(
+                params["stack"], caches, self.segments
+            ):
+                if seg.count == 1:
+                    h, nc = _block_prefill(
+                        seg_params, h, cfg, seg.kind, positions=positions,
+                        cache=seg_cache, start_index=start_index,
+                    )
+                else:
+                    def scan_fn(carry, xs):
+                        layer, cache = xs
+                        h2, nc = _block_prefill(
+                            layer, carry, cfg, seg.kind, positions=positions,
+                            cache=cache, start_index=start_index,
+                        )
+                        return h2, nc
+                    h, nc = jax.lax.scan(scan_fn, h, (seg_params, seg_cache))
+                new_caches.append(nc)
+            h = norm_apply(params["final_norm"], h, cfg.norm)
+            last = jnp.clip(length - 1, 0, P - 1)
+            h_last = jnp.take_along_axis(h, last[:, None, None], axis=1)
+            return self.logits(params, h_last), new_caches
+
+        # Recurrent/hybrid fallback: scan the decode step over the chunk,
+        # masking cache updates (and the returned logits) past each row's
+        # true length. Exactly equivalent to feeding the unpadded prompt.
+        specs = self.cache_specs(B, 2)  # axes metadata only; sizes unused
+
+        def body(carry, xs):
+            caches_c, last_logits = carry
+            tok, t = xs
+            logits, new_caches = self.decode_step(
+                params, tok[:, None], caches_c, start_index + t
+            )
+            valid = t < length
+            caches_c = slot_mask_select(valid, new_caches, caches_c, specs)
+            last_logits = jnp.where(valid[:, None, None], logits, last_logits)
+            return (caches_c, last_logits), None
+
+        last0 = jnp.zeros((B, 1, cfg.vocab_size), params["embed"].dtype)
+        (caches, last_logits), _ = jax.lax.scan(
+            body, (caches, last0), (jnp.moveaxis(inputs, 1, 0), jnp.arange(P))
+        )
+        return last_logits, caches
 
     def decode_step(
         self,
         params: Dict,
         token: jax.Array,          # (B, 1) int32
         caches,
-        cache_index: jax.Array,    # scalar int32: current length
+        cache_index: jax.Array,    # int32 current length: scalar or (B,)
     ):
         cfg = self.cfg
         x = params["embed"][token]
-        positions = jnp.full((token.shape[0], 1), cache_index, jnp.int32)[0]
+        idx = jnp.asarray(cache_index, jnp.int32)
+        if idx.ndim == 0:
+            positions = jnp.full((1,), idx, jnp.int32)
+        else:
+            positions = idx[:, None]  # (B, 1): per-slot rope positions
+        cache_index = idx
         if cfg.family in ("ssm", "hybrid"):
             h, new_caches = zamba.zamba_decode(
                 params["stack"], x, cfg, caches,

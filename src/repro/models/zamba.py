@@ -117,10 +117,11 @@ def _shared_block(
     if cache is None:
         o = attn.mea_attention(q, k, v, causal=True, chunk=cfg.attn_chunk)
     else:
-        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, cache_index, axis=1)
-        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, cache_index, axis=1)
-        length = jnp.full((h.shape[0],), cache_index + 1, jnp.int32)
-        o = attn.decode_attention(q, ck, cv, length=length)
+        ck = attn.cache_row_update(cache["k"], k, cache_index)
+        cv = attn.cache_row_update(cache["v"], v, cache_index)
+        o = attn.decode_attention(
+            q, ck, cv, length=attn.decode_lengths(cache_index, h.shape[0])
+        )
         new_cache = {"k": ck, "v": cv}
     t = t + jnp.einsum("bshk,hkd->bsd", o, params["wo"])
 

@@ -30,7 +30,14 @@ from repro.optim.optimizers import (
     global_norm,
 )
 
-__all__ = ["make_train_step", "make_prefill_step", "make_decode_step", "make_init_fn"]
+__all__ = [
+    "make_train_step",
+    "make_prefill_step",
+    "make_slot_prefill_step",
+    "make_decode_step",
+    "make_slot_decode_step",
+    "make_init_fn",
+]
 
 
 def make_train_step(
@@ -180,11 +187,41 @@ def make_prefill_step(model: Model) -> Callable:
     return prefill_step
 
 
+def make_slot_prefill_step(model: Model) -> Callable:
+    """Cache-writing batched prefill for the serving engine.
+
+    (params, inputs (B,P) right-padded, caches, length (B,), start_index)
+    -> (last-valid logits (B,1,V), caches). Like the fastest-k
+    ``worker_mask``, the ragged-length information enters as DATA — one
+    compile per (B, P-bucket) shape, re-used across every admission."""
+
+    def slot_prefill_step(params, inputs, caches, length, start_index):
+        return model.prefill_with_cache(
+            params, inputs, caches, length=length, start_index=start_index
+        )
+
+    return slot_prefill_step
+
+
 def make_decode_step(model: Model) -> Callable:
     def decode_step(params, token, caches, cache_index):
         return model.decode_step(params, token, caches, cache_index)
 
     return decode_step
+
+
+def make_slot_decode_step(model: Model) -> Callable:
+    """One decode tick over the whole slot pool.
+
+    ``cache_index`` is the per-slot position vector (n_slots,) — every
+    slot sits at its own length; free slots ride along as masked lanes
+    (their writes land in dead rows and are overwritten at allocation),
+    so occupancy never changes the compiled shape."""
+
+    def slot_decode_step(params, tokens, caches, cache_index):
+        return model.decode_step(params, tokens, caches, cache_index)
+
+    return slot_decode_step
 
 
 def make_init_fn(model: Model, optimizer: Optimizer) -> Callable:

@@ -1,0 +1,33 @@
+"""repro.serve — continuous-batching inference with order-statistics
+hedged dispatch (DESIGN.md §10).
+
+The training side of this repo prices every scheduling decision with the
+expected k-th order statistic of worker response times; this package
+applies the same machinery to a second workload: serving. A fixed-shape
+slot pool + masked decode tick give recompile-free continuous batching
+(engine/kv_pool/scheduler), and a multi-replica router prices hedged
+dispatch with ``expected_kth`` against EWMA straggler telemetry
+(router).
+"""
+
+from .engine import EngineStats, ServeEngine, generate_offline, run_static
+from .kv_pool import SlotPool
+from .router import DispatchOutcome, HedgedRouter, HedgePlan, ReplicaSet
+from .scheduler import CostModel, EventClock, Request, Scheduler, next_bucket
+
+__all__ = [
+    "ServeEngine",
+    "EngineStats",
+    "generate_offline",
+    "run_static",
+    "SlotPool",
+    "Scheduler",
+    "Request",
+    "CostModel",
+    "EventClock",
+    "next_bucket",
+    "HedgedRouter",
+    "HedgePlan",
+    "DispatchOutcome",
+    "ReplicaSet",
+]

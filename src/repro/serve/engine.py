@@ -1,0 +1,317 @@
+"""Continuous-batching inference engine over a fixed slot pool.
+
+The pool's ``n_slots`` lanes are one fixed-shape jitted decode call; slot
+occupancy enters as DATA (a mask + per-slot position vector), exactly
+like the fastest-k ``worker_mask`` in ``repro.runtime.steps`` — so
+requests join and leave mid-flight with zero recompiles. Admission runs
+the batched cache-writing prefill (``model.prefill_with_cache``) into a
+batch-1 cache that is then installed into the freed slot with one
+spec-driven slice write; prompts are padded to power-of-two buckets so a
+handful of compiles cover every length.
+
+Decode is greedy (argmax) by design: tests assert the continuous-batched
+token stream is identical to a per-request offline decode, which is the
+correctness contract that makes the scheduler/pool machinery trustable.
+
+``run_static`` is the baseline the benchmarks compare against: same
+kernels, same pool, but admissions barrier until the whole previous
+batch drains (classic static batching — finished lanes ride dead until
+the longest request completes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import slot_mask_select
+from repro.runtime.steps import make_slot_decode_step, make_slot_prefill_step
+
+from .kv_pool import SlotPool
+from .scheduler import CostModel, EventClock, Request, Scheduler, next_bucket
+
+__all__ = ["ServeEngine", "EngineStats", "generate_offline", "run_static"]
+
+
+@dataclasses.dataclass
+class EngineStats:
+    generated_tokens: int = 0
+    decode_ticks: int = 0
+    prefill_calls: int = 0
+    prefill_tokens: int = 0
+    virtual_seconds: float = 0.0
+    wall_seconds: float = 0.0
+
+    @property
+    def tokens_per_vsec(self) -> float:
+        return self.generated_tokens / max(self.virtual_seconds, 1e-12)
+
+    @property
+    def tokens_per_wsec(self) -> float:
+        return self.generated_tokens / max(self.wall_seconds, 1e-12)
+
+
+@functools.lru_cache(maxsize=None)
+def _engine_steps(model, n_slots: int, max_len: int):
+    """Jitted prefill/decode shared across every engine of the same
+    geometry (per-instance jax.jit closures would re-trace each time a
+    new engine is built — benchmarks build several)."""
+    specs = model.cache_specs(n_slots, max_len)
+    prefill = make_slot_prefill_step(model)
+    decode = make_slot_decode_step(model)
+
+    def decode_tick(params, tokens, caches, positions, mask):
+        logits, new_caches = decode(params, tokens, caches, positions)
+        # Lanes not decoding (free / mid-prefill) must not mutate
+        # state: recurrent leaves would otherwise absorb garbage.
+        return logits, slot_mask_select(mask, new_caches, caches, specs)
+
+    return jax.jit(prefill), jax.jit(decode_tick)
+
+
+class ServeEngine:
+    def __init__(
+        self,
+        model,
+        params,
+        *,
+        n_slots: int,
+        max_len: int,
+        scheduler: Optional[Scheduler] = None,
+        prefill_bucket: int = 16,
+    ):
+        if model.cfg.is_encoder:
+            raise ValueError("serving needs a causal decoder architecture")
+        self.model = model
+        self.params = params
+        self.pool = SlotPool(model, n_slots, max_len)
+        self.sched = scheduler or Scheduler(n_slots)
+        self.prefill_bucket = prefill_bucket
+        self.stats = EngineStats()
+        self.events: List[Tuple[str, float, int]] = []  # (action, vtime, rid)
+        self._requests: Dict[int, Request] = {}
+        self._next_rid = 0
+        # Per-slot decode state (host side).
+        self._pending = np.zeros(n_slots, np.int32)   # next token to feed
+        self._decoding = np.zeros(n_slots, bool)      # prefill done, generating
+        self._blank1 = model.blank_caches(1, max_len)
+        self._prefill, self._decode = _engine_steps(model, n_slots, max_len)
+
+    # -- submission ----------------------------------------------------------
+    def submit(
+        self, prompt, max_new_tokens: int, arrival: float = 0.0
+    ) -> int:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size + max_new_tokens > self.pool.max_len:
+            raise ValueError(
+                f"prompt({prompt.size}) + max_new_tokens({max_new_tokens}) "
+                f"exceeds max_len({self.pool.max_len})"
+            )
+        rid = self._next_rid
+        self._next_rid += 1
+        req = Request(rid, prompt, int(max_new_tokens), float(arrival))
+        self._requests[rid] = req
+        self.sched.submit(req)
+        return rid
+
+    # -- actions -------------------------------------------------------------
+    def _slot_of(self, rid: int) -> int:
+        return self.pool.owner.index(rid)
+
+    def _do_prefill(self, req: Request) -> None:
+        sched, pool = self.sched, self.pool
+        if req.prefilled == 0:
+            sched.on_admit(req)
+            slot = pool.allocate(owner=req.rid)
+            assert slot is not None, "scheduler admitted without a free slot"
+            slot_caches = self._blank1
+        else:
+            slot = self._slot_of(req.rid)
+            slot_caches = pool.read_slot(slot)
+
+        start, n_tok = sched.chunk_for(req)
+        # Cap the pad bucket at the slot capacity past `start`: an oversized
+        # chunk would crash (update wider than the cache) or, worse, let
+        # XLA clamp the write start and silently overwrite valid rows.
+        # submit() guarantees n_tok <= max_len - start.
+        bucket = min(next_bucket(n_tok, self.prefill_bucket), pool.max_len - start)
+        chunk = np.zeros((1, bucket), np.int32)
+        chunk[0, :n_tok] = req.prompt[start : start + n_tok]
+        logits, slot_caches = self._prefill(
+            self.params,
+            jnp.asarray(chunk),
+            slot_caches,
+            jnp.asarray([n_tok], jnp.int32),
+            jnp.int32(start),
+        )
+        pool.write_slot(slot, slot_caches, position=start + n_tok)
+        done = start + n_tok >= req.prompt_len
+        sched.on_prefill_chunk(req, n_tok, done)
+        self.stats.prefill_calls += 1
+        self.stats.prefill_tokens += n_tok
+        if done:
+            tok = int(jnp.argmax(logits[0, -1]))
+            self._emit(req, tok)
+            if self._finished(req):     # max_new_tokens == 1
+                pool.free(slot)
+            else:
+                self._pending[slot] = tok
+                self._decoding[slot] = True
+        self.events.append(("prefill", self.sched.clock.now, req.rid))
+
+    def _do_decode(self) -> None:
+        pool = self.pool
+        mask = self._decoding.copy()
+        tokens = jnp.asarray(self._pending[:, None])
+        positions = jnp.asarray(np.clip(pool.positions, 0, pool.max_len - 1))
+        logits, pool.caches = self._decode(
+            self.params, tokens, pool.caches, positions, jnp.asarray(mask)
+        )
+        self.sched.on_decode_tick()
+        self.stats.decode_ticks += 1
+        next_tok = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1), np.int32)
+        for slot in np.nonzero(mask)[0]:
+            slot = int(slot)
+            pool.positions[slot] += 1
+            req = self._requests[pool.owner[slot]]
+            self._emit(req, int(next_tok[slot]))
+            if self._finished(req):
+                self._decoding[slot] = False
+                pool.free(slot)
+            else:
+                self._pending[slot] = next_tok[slot]
+        self.events.append(("decode", self.sched.clock.now, -1))
+
+    def _emit(self, req: Request, tok: int) -> None:
+        if not req.tokens:
+            req.t_first_token = self.sched.clock.now
+        req.tokens.append(tok)
+        self.stats.generated_tokens += 1
+
+    def _finished(self, req: Request) -> bool:
+        if len(req.tokens) >= req.max_new_tokens:
+            if req.t_done is None:
+                req.t_done = self.sched.clock.now
+            return True
+        return False
+
+    def defrag(self) -> Dict[int, int]:
+        """Compact the pool's live slots and remap the engine's per-slot
+        decode state to match — safe mid-flight (bare ``pool.defrag()``
+        would silently desync ``_pending``/``_decoding``)."""
+        moves = self.pool.defrag()
+        if moves:
+            inv = {new: old for old, new in moves.items()}
+            pending, decoding = self._pending, self._decoding
+            self._pending = np.zeros_like(pending)
+            self._decoding = np.zeros_like(decoding)
+            for s in np.nonzero(self.pool.active)[0]:
+                src = inv.get(int(s), int(s))
+                self._pending[s] = pending[src]
+                self._decoding[s] = decoding[src]
+        return moves
+
+    # -- driver --------------------------------------------------------------
+    def step(self) -> str:
+        """Run one scheduler action; returns its kind."""
+        kind, req = self.sched.next_action(self.pool.n_active, self.pool.n_free)
+        if kind == "prefill":
+            self._do_prefill(req)
+        elif kind == "decode":
+            self._do_decode()
+        elif kind == "idle":
+            self.sched.on_idle()
+            self.events.append(("idle", self.sched.clock.now, -1))
+        return kind
+
+    def run(self) -> Dict[int, Request]:
+        """Drive until every submitted request completes."""
+        t0 = time.perf_counter()
+        while self.step() != "done":
+            pass
+        self.stats.wall_seconds += time.perf_counter() - t0
+        self.stats.virtual_seconds = self.sched.clock.now
+        return dict(self._requests)
+
+
+# ---------------------------------------------------------------------------
+# References: per-request offline decode + static batching baseline
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _offline_decode(model):
+    return jax.jit(model.decode_step)
+
+
+def generate_offline(
+    model, params, prompt, max_new_tokens: int, max_len: int
+) -> List[int]:
+    """Single-request greedy generation with batch-1 caches — the token
+    stream the continuous-batching engine must reproduce exactly."""
+    prompt = np.asarray(prompt, np.int32).reshape(1, -1)
+    P = prompt.shape[1]
+    caches = model.blank_caches(1, max_len)
+    logits, caches = model.prefill_with_cache(
+        params, jnp.asarray(prompt), caches,
+        length=jnp.asarray([P], jnp.int32), start_index=jnp.int32(0),
+    )
+    tok = int(jnp.argmax(logits[0, -1]))
+    out = [tok]
+    decode = _offline_decode(model)
+    for t in range(P, P + max_new_tokens - 1):
+        logits, caches = decode(
+            params, jnp.asarray([[tok]], jnp.int32), caches, jnp.int32(t)
+        )
+        tok = int(jnp.argmax(logits[0, -1]))
+        out.append(tok)
+    return out
+
+
+class _StaticScheduler(Scheduler):
+    """Static batching: admissions barrier until the pool fully drains."""
+
+    def __init__(self, n_slots: int, *, clock: Optional[EventClock] = None):
+        super().__init__(n_slots, clock=clock)
+        self._barrier_open = True
+
+    def next_action(self, n_active: int, n_free: int):
+        if n_active == 0:
+            self._barrier_open = True
+        if self.running:
+            return "prefill", self.running[0]
+        req = self._eligible()
+        if req is not None and n_free > 0 and self._barrier_open:
+            return "prefill", req
+        if n_active > 0:
+            self._barrier_open = False
+            return "decode", None
+        if self._next_arrival() is not None:
+            return "idle", None
+        return "done", None
+
+
+def run_static(
+    model,
+    params,
+    requests: List[Tuple[np.ndarray, int, float]],   # (prompt, max_new, arrival)
+    *,
+    n_slots: int,
+    max_len: int,
+    cost: Optional[CostModel] = None,
+    prefill_bucket: int = 16,
+) -> Tuple[Dict[int, Request], EngineStats]:
+    """Same kernels/pool, static-batch admission (the baseline)."""
+    sched = _StaticScheduler(n_slots, clock=EventClock(cost))
+    eng = ServeEngine(
+        model, params, n_slots=n_slots, max_len=max_len,
+        scheduler=sched, prefill_bucket=prefill_bucket,
+    )
+    for prompt, m, arr in requests:
+        eng.submit(prompt, m, arrival=arr)
+    return eng.run(), eng.stats

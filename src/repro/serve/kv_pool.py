@@ -1,0 +1,128 @@
+"""Slot-based KV/SSM cache pool.
+
+The pool owns one device-resident cache pytree shaped for ``n_slots``
+sequences of up to ``max_len`` tokens, built from ``model.cache_specs``
+— so it works unchanged for every registered arch family (attention KV
+rows, MLA latent rows, Mamba2/xLSTM recurrent states). Slot occupancy is
+host-side bookkeeping; all device mutation goes through the spec-driven
+slot helpers in ``repro.models.layers`` (``act_batch`` marks where the
+slot axis lives in each leaf, which is NOT always axis 0 — stacked-layer
+segments put "layers" first).
+
+Invariants (tested in tests/test_serve.py):
+  * a slot is in exactly one of {free, active};
+  * ``positions[s]`` is the next cache write index of slot ``s``;
+  * freeing resets bookkeeping immediately and lazily reuses device rows
+    (the next prefill overwrites the whole slot);
+  * ``defrag()`` compacts active slots to the lowest indices with one
+    gather, preserving per-slot contents and positions.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import slot_read, slot_reset, slot_take, slot_write
+
+__all__ = ["SlotPool"]
+
+
+@functools.lru_cache(maxsize=None)
+def _pool_ops(model, n_slots: int, max_len: int):
+    """Jitted slot ops shared across every pool of the same geometry —
+    per-instance jax.jit wrappers would re-trace for each new pool."""
+    specs = model.cache_specs(n_slots, max_len)
+    return (
+        specs,
+        jax.jit(lambda c, s: slot_read(c, specs, s)),
+        jax.jit(lambda c, s, v: slot_write(c, specs, s, v)),
+        jax.jit(lambda c, s: slot_reset(c, specs, s)),
+        jax.jit(lambda c, p: slot_take(c, specs, p)),
+    )
+
+
+class SlotPool:
+    def __init__(self, model, n_slots: int, max_len: int):
+        if n_slots < 1:
+            raise ValueError("need at least one slot")
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.specs, self._read, self._write, self._reset, self._take = _pool_ops(
+            model, n_slots, max_len
+        )
+        self.caches = model.blank_caches(n_slots, max_len)
+        # Host-side occupancy. Free slots are handed out lowest-index
+        # first so the engine's active lanes stay dense without defrag.
+        self.positions = np.zeros(n_slots, np.int32)
+        self.active = np.zeros(n_slots, bool)
+        self.owner: List[Optional[int]] = [None] * n_slots
+
+    # -- occupancy -----------------------------------------------------------
+    @property
+    def n_active(self) -> int:
+        return int(self.active.sum())
+
+    @property
+    def n_free(self) -> int:
+        return self.n_slots - self.n_active
+
+    def active_mask(self) -> np.ndarray:
+        return self.active.copy()
+
+    def allocate(self, owner: Optional[int] = None) -> Optional[int]:
+        """Claim the lowest free slot (or None when full)."""
+        free = np.nonzero(~self.active)[0]
+        if free.size == 0:
+            return None
+        slot = int(free[0])
+        self.active[slot] = True
+        self.owner[slot] = owner
+        self.positions[slot] = 0
+        return slot
+
+    def free(self, slot: int) -> None:
+        if not self.active[slot]:
+            raise ValueError(f"slot {slot} is not active")
+        self.active[slot] = False
+        self.owner[slot] = None
+        self.positions[slot] = 0
+
+    # -- device-side slot ops ------------------------------------------------
+    def read_slot(self, slot: int):
+        """Batch-1 cache pytree for one slot (chunked-prefill continuation)."""
+        return self._read(self.caches, jnp.int32(slot))
+
+    def write_slot(self, slot: int, slot_caches, position: int) -> None:
+        """Install a batch-1 cache (a prefill result) into ``slot`` and
+        record its next write position."""
+        self.caches = self._write(self.caches, jnp.int32(slot), slot_caches)
+        self.positions[slot] = position
+
+    def reset_slot(self, slot: int) -> None:
+        """Restore one slot's device rows to the spec init values
+        (zeros for KV rows, ones for the sLSTM normalizer, ...)."""
+        self.caches = self._reset(self.caches, jnp.int32(slot))
+        self.positions[slot] = 0
+
+    def defrag(self) -> Dict[int, int]:
+        """Compact active slots to the lowest indices (one gather over
+        every leaf). Returns the {old_slot: new_slot} moves applied to
+        live slots. NOTE: an engine holding per-slot state on top of
+        this pool must remap it with the returned moves — use
+        ``ServeEngine.defrag()``, not this, on a live engine."""
+        order = np.concatenate(
+            [np.nonzero(self.active)[0], np.nonzero(~self.active)[0]]
+        ).astype(np.int32)
+        moves = {int(old): new for new, old in enumerate(order) if int(old) != new}
+        if not moves:
+            return {}
+        self.caches = self._take(self.caches, jnp.asarray(order))
+        self.positions = self.positions[order]
+        self.active = self.active[order]
+        self.owner = [self.owner[int(old)] for old in order]
+        return {old: new for old, new in moves.items() if self.active[new]}

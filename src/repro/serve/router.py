@@ -1,0 +1,177 @@
+"""Multi-replica hedged dispatch priced by order statistics.
+
+The paper prices every scheduling decision with the expected k-th order
+statistic ``mu_{k:n}(beta)`` of random worker response times. Hedged
+inference dispatch is the same decision at serving scale: send one
+request to ``n_h`` replicas at once, keep the fastest ``k`` responses
+(k=1 for plain generation, k>1 for quorum/verification schemes), cancel
+the losers. Each extra replica buys latency through the order-statistic
+tail ``H(n, k)`` but costs duplicated compute, so the router minimizes
+
+    cost(n) = mu_{k:n}(beta) * slowdown(chosen n) + c_replica * n
+
+by brute force over the feasible fan-outs — ``expected_kth`` makes the
+latency term exact for both of the paper's delay models. Per-replica
+speed estimates come from the same EWMA ``StragglerTracker`` the
+training runtime uses for demotion; replicas the tracker marks slow stop
+being chosen, which is the serving analogue of dropping a persistent
+straggler from ``n``.
+
+``ReplicaSet`` is the ground-truth simulator (hidden per-replica speed
+factors over a ``repro.core.delay_models`` base model); the router only
+ever sees observed response times.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.order_stats import expected_kth
+from repro.runtime.telemetry import StragglerTracker
+
+__all__ = ["HedgePlan", "DispatchOutcome", "ReplicaSet", "HedgedRouter"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HedgePlan:
+    n_h: int                      # hedge fan-out
+    k: int                        # responses to wait for
+    replicas: Tuple[int, ...]     # chosen replica ids (fastest-estimated first)
+    expected_latency: float       # mu_{k:n} scaled by the subset's slowdown
+    expected_cost: float          # latency + c_replica * n_h
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchOutcome:
+    plan: HedgePlan
+    completion_time: float        # k-th fastest response time
+    completed: Tuple[int, ...]    # replicas whose responses were used
+    cancelled: Tuple[int, ...]    # hedged losers, cancelled at completion
+
+
+class ReplicaSet:
+    """Ground truth for simulation: response time = base-model draw times
+    a fixed per-replica speed factor (1.0 = nominal, 3.0 = straggler)."""
+
+    def __init__(self, delay_model, speed_factors: Sequence[float], seed: int = 0):
+        self.model = delay_model
+        self.speed = np.asarray(speed_factors, np.float64)
+        if np.any(self.speed <= 0):
+            raise ValueError("speed factors must be > 0")
+        self.rng = np.random.default_rng(seed)
+
+    @property
+    def n_replicas(self) -> int:
+        return int(self.speed.size)
+
+    def sample(self, replicas: Sequence[int], beta: float = 1.0) -> np.ndarray:
+        base = self.model.sample(self.rng, len(replicas), beta)
+        return base * self.speed[np.asarray(replicas, int)]
+
+
+class HedgedRouter:
+    def __init__(
+        self,
+        delay_model,
+        n_replicas: int,
+        *,
+        quorum: int = 1,
+        cost_per_replica: float = 0.0,
+        slots_per_replica: int = 1,
+        n_max: Optional[int] = None,
+        ewma_alpha: float = 0.1,
+        warmup: int = 8,
+    ):
+        if not (1 <= quorum <= n_replicas):
+            raise ValueError("need 1 <= quorum <= n_replicas")
+        self.model = delay_model
+        self.n_replicas = n_replicas
+        self.quorum = quorum
+        self.cost_per_replica = cost_per_replica
+        self.slots_per_replica = slots_per_replica
+        self.n_max = n_max or n_replicas
+        self.tracker = StragglerTracker(n_replicas, alpha=ewma_alpha, warmup=warmup)
+        self.inflight = np.zeros(n_replicas, np.int64)
+
+    # -- pricing -------------------------------------------------------------
+    def _slowdowns(self) -> np.ndarray:
+        """Per-replica slowdown estimates (1.0 until telemetry warms up)."""
+        if self.tracker.count < self.tracker.warmup:
+            return np.ones(self.n_replicas)
+        s = self.tracker.slowdown()
+        return np.where(s > 0, s, 1.0)
+
+    def available(self) -> List[int]:
+        return [
+            r for r in range(self.n_replicas)
+            if self.inflight[r] < self.slots_per_replica
+        ]
+
+    def hedge_cost(self, n: int, beta: float = 1.0, scale: float = 1.0) -> float:
+        """Priced cost of fan-out ``n``: expected k-th order statistic of
+        the response times plus the duplicated-compute charge."""
+        k = min(self.quorum, n)
+        return expected_kth(self.model, n, k, beta) * scale + self.cost_per_replica * n
+
+    def choose_hedge(self, beta: float = 1.0) -> Optional[HedgePlan]:
+        """Brute-force minimization of ``hedge_cost`` over feasible
+        fan-outs, on the fastest-estimated available replicas."""
+        slow = self._slowdowns()
+        avail = sorted(self.available(), key=lambda r: (slow[r], r))
+        if len(avail) < self.quorum:
+            return None
+        best: Optional[HedgePlan] = None
+        for n in range(self.quorum, min(len(avail), self.n_max) + 1):
+            subset = avail[:n]
+            scale = float(np.mean(slow[subset]))
+            k = min(self.quorum, n)
+            lat = expected_kth(self.model, n, k, beta) * scale
+            cost = lat + self.cost_per_replica * n
+            if best is None or cost < best.expected_cost:
+                best = HedgePlan(n, k, tuple(subset), lat, cost)
+        return best
+
+    # -- dispatch lifecycle --------------------------------------------------
+    def dispatch(
+        self,
+        replica_set: ReplicaSet,
+        beta: float = 1.0,
+        *,
+        auto_complete: bool = True,
+    ) -> Optional[DispatchOutcome]:
+        """Hedge one request. Occupies one slot on each chosen replica;
+        with ``auto_complete=False`` the caller owns releasing them via
+        ``complete(outcome)`` (concurrent in-flight hedges)."""
+        plan = self.choose_hedge(beta)
+        if plan is None:
+            return None
+        replicas = np.asarray(plan.replicas, int)
+        times = replica_set.sample(replicas, beta)
+        self.inflight[replicas] += 1
+        order = np.argsort(times, kind="stable")
+        completed = tuple(int(r) for r in replicas[order[: plan.k]])
+        cancelled = tuple(int(r) for r in replicas[order[plan.k :]])
+        outcome = DispatchOutcome(
+            plan, float(times[order[plan.k - 1]]), completed, cancelled
+        )
+        # Telemetry sees only the responses that actually arrived —
+        # cancelled losers are censored, never observed.
+        obs = np.zeros(self.n_replicas)
+        alive = np.zeros(self.n_replicas, bool)
+        obs[list(completed)] = times[order[: plan.k]]
+        alive[list(completed)] = True
+        self.tracker.observe(obs, alive)
+        if auto_complete:
+            self.complete(outcome)
+        return outcome
+
+    def complete(self, outcome: DispatchOutcome) -> None:
+        """Winner responded: release the winner's slot AND every hedged
+        loser's (cancellation is what makes hedging affordable)."""
+        for r in outcome.completed + outcome.cancelled:
+            if self.inflight[r] <= 0:
+                raise ValueError(f"replica {r} has no in-flight work")
+            self.inflight[r] -= 1
