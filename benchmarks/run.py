@@ -55,7 +55,8 @@ def main() -> None:
     fast = not args.full
 
     from . import fig1_3_theory, fig4_simulation, fig5to7_general_model
-    from . import fig8to9_costs, perf_serve, perf_sim, roofline_report
+    from . import fig8to9_costs, perf_paged, perf_serve, perf_sim
+    from . import roofline_report
 
     benches = {
         "fig1_3_theory": fig1_3_theory.run,
@@ -64,6 +65,7 @@ def main() -> None:
         "fig8to9_costs": fig8to9_costs.run,
         "perf_sim": perf_sim.run,
         "perf_serve": perf_serve.run,
+        "perf_paged": perf_paged.run,
         "roofline_report": roofline_report.run,
     }
     if args.only:

@@ -32,6 +32,12 @@ def main():
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="split long prompts into chunks this size "
                          "(bounds how long one admission stalls decoding)")
+    ap.add_argument("--paged", action="store_true",
+                    help="page the KV cache into a block arena with "
+                         "admit-by-budget (DESIGN.md §11); greedy tokens "
+                         "are byte-identical to the contiguous pool")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="paged mode: cache rows per block")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
@@ -43,6 +49,7 @@ def main():
     engine = ServeEngine(
         model, params, n_slots=args.slots, max_len=max_len,
         scheduler=Scheduler(args.slots, prefill_chunk=args.prefill_chunk),
+        block_size=args.block_size if args.paged else None,
     )
 
     host_rng = np.random.default_rng(0)
@@ -57,8 +64,14 @@ def main():
     wall = time.perf_counter() - t0
 
     s = engine.stats
+    mode = f"paged(block={args.block_size})" if args.paged else "contiguous"
     print(f"arch={cfg.name} slots={args.slots} requests={args.requests} "
-          f"max_len={max_len}")
+          f"max_len={max_len} kv={mode}")
+    if engine.pool.paged:
+        mgr = engine.pool.manager
+        print(f"kv arena: {mgr.used_high_water}/{mgr.num_blocks} blocks "
+              f"high-water ({engine.pool.kv_bytes_high_water()} B vs "
+              f"{engine.pool.kv_bytes_contiguous()} B contiguous)")
     print(f"prefill: {s.prefill_calls} calls / {s.prefill_tokens} tokens; "
           f"decode: {s.decode_ticks} ticks")
     print(f"generated {s.generated_tokens} tokens in {wall:.2f}s wall "

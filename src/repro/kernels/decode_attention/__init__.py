@@ -1,3 +1,3 @@
-from .ops import decode_ref, flash_decode
+from .ops import decode_ref, flash_decode, paged_decode_ref, paged_flash_decode
 
-__all__ = ["flash_decode", "decode_ref"]
+__all__ = ["flash_decode", "decode_ref", "paged_flash_decode", "paged_decode_ref"]

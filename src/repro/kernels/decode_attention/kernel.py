@@ -22,7 +22,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["decode_attention_fwd"]
+__all__ = ["decode_attention_fwd", "paged_decode_attention_fwd"]
 
 NEG_INF = -1e30
 
@@ -86,11 +86,20 @@ def decode_attention_fwd(
     scale = 1.0 / math.sqrt(D)
 
     block_kv = min(block_kv, S)
-    pad = (-S) % block_kv
-    if pad:
-        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
-    n_kv = (S + pad) // block_kv
+    if S % block_kv:
+        # Padding here would jnp.pad (= copy) the whole K/V cache in HBM
+        # on EVERY decode tick. Caches are allocated block-aligned once
+        # (``Model.cache_specs`` rounds max_len up to KV_SEQ_ALIGN), so a
+        # dividing block always exists — clamp to the largest one instead
+        # of copying. A cache with no usable divisor was allocated
+        # without the alignment contract: that IS a caller bug.
+        block_kv = next(b for b in range(block_kv, 0, -1) if S % b == 0)
+        if block_kv < 8:
+            raise ValueError(
+                f"cache length S={S} has no usable kv block size; allocate "
+                "the cache block-aligned (cache_specs rounds max_len up)"
+            )
+    n_kv = S // block_kv
 
     # Group queries by kv head: (B, Hkv, G, D).
     qg = q.reshape(B, Hkv, G, D)
@@ -114,4 +123,113 @@ def decode_attention_fwd(
         ],
         interpret=interpret,
     )(qg, k, v, lengths)
+    return out.reshape(B, H, Dv)
+
+
+# ---------------------------------------------------------------------------
+# Paged flash-decode: the KV cache is a global block arena + per-sequence
+# block tables (vLLM-style). The grid's sequential dim walks TABLE SLOTS,
+# not cache rows: the block table is scalar-prefetched (SMEM before the
+# body runs) so each K/V BlockSpec index_map gathers the right arena row,
+# and slots past ceil(length/block) clamp to the last live block — Pallas
+# skips the HBM->VMEM copy when the mapped block index repeats, and
+# @pl.when skips the compute. Decode traffic and FLOPs are therefore
+# proportional to LIVE tokens, not to n_slots * max_len.
+# ---------------------------------------------------------------------------
+
+def _paged_kernel(tab_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *, scale, block_size):
+    b = pl.program_id(0)
+    t = pl.program_id(2)
+    n_t = pl.num_programs(2)
+
+    @pl.when(t == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[b]
+    kv_start = t * block_size
+
+    @pl.when(kv_start < length)
+    def _step():
+        q = q_ref[0, 0, :, :].astype(jnp.float32) * scale    # (G, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)            # (bs, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)            # (bs, Dv)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                                     # (G, bs)
+        kv_ids = kv_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kv_ids < length, s, NEG_INF)
+
+        m_prev = m_ref[:, 0]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[:, 0] = l_ref[:, 0] * corr + p.sum(axis=1)
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+        m_ref[:, 0] = m_new
+
+    @pl.when(t == n_t - 1)
+    def _finish():
+        # length == 0 leaves l at 0 -> output exactly zeros (the paged
+        # oracle mirrors this convention for empty sequences).
+        l = jnp.maximum(l_ref[:, 0], 1e-30)
+        o_ref[0, 0, :, :] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def paged_decode_attention_fwd(
+    q: jax.Array,             # (B, H, D) — single query position per sequence
+    k_arena: jax.Array,       # (num_blocks + 1, block_size, Hkv, D)
+    v_arena: jax.Array,       # (num_blocks + 1, block_size, Hkv, Dv)
+    block_tables: jax.Array,  # (B, T) arena indices; 0 = NULL sink block
+    lengths: jax.Array,       # (B,) valid prefix length per sequence
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, D = q.shape
+    block_size, Hkv, Dv = k_arena.shape[1], k_arena.shape[2], v_arena.shape[3]
+    T = block_tables.shape[1]
+    G = H // Hkv
+    scale = 1.0 / math.sqrt(D)
+
+    qg = q.reshape(B, Hkv, G, D)
+    block_tables = block_tables.astype(jnp.int32)
+    lengths = lengths.astype(jnp.int32)
+
+    def kv_map(b, h, t, tab_ref, len_ref):
+        # Clamp dead table slots to the last live block: a repeated block
+        # index costs no new copy, and the body skips the compute.
+        n_live = jax.lax.div(len_ref[b] + block_size - 1, block_size)
+        t_eff = jnp.minimum(t, jnp.maximum(n_live - 1, 0))
+        return (tab_ref[b, t_eff], 0, h, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # block_tables, lengths
+        grid=(B, Hkv, T),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, t, tab, lens: (b, h, 0, 0)),
+            pl.BlockSpec((1, block_size, 1, D), kv_map),
+            pl.BlockSpec((1, block_size, 1, Dv), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, Dv), lambda b, h, t, tab, lens: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, Dv), jnp.float32),
+        ],
+    )
+
+    out = pl.pallas_call(
+        functools.partial(_paged_kernel, scale=scale, block_size=block_size),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, Dv), q.dtype),
+        interpret=interpret,
+    )(block_tables, lengths, qg, k_arena, v_arena)
     return out.reshape(B, H, Dv)

@@ -4,10 +4,10 @@ import functools
 
 import jax
 
-from .kernel import decode_attention_fwd
-from .ref import decode_ref
+from .kernel import decode_attention_fwd, paged_decode_attention_fwd
+from .ref import decode_ref, paged_decode_ref
 
-__all__ = ["flash_decode", "decode_ref"]
+__all__ = ["flash_decode", "paged_flash_decode", "decode_ref", "paged_decode_ref"]
 
 
 @functools.partial(jax.jit, static_argnames=("block_kv", "interpret"))
@@ -15,3 +15,13 @@ def flash_decode(q, k, v, lengths, *, block_kv: int = 512,
                  interpret: bool = False):
     return decode_attention_fwd(q, k, v, lengths, block_kv=block_kv,
                                 interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_flash_decode(q, k_arena, v_arena, block_tables, lengths, *,
+                       interpret: bool = False):
+    """Flash-decode over a paged KV arena: walks only each sequence's
+    live blocks via the scalar-prefetched block table."""
+    return paged_decode_attention_fwd(
+        q, k_arena, v_arena, block_tables, lengths, interpret=interpret
+    )

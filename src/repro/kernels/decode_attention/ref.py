@@ -1,11 +1,29 @@
-"""Oracle: the model stack's own masked single-query attention."""
+"""Oracles: the model stack's own masked single-query attention.
+
+The paged oracle is the exact jnp path the serving engine decodes with
+(gather the block-table view, run ``decode_attention``) — so kernel
+parity here transitively proves parity with the engine's hot loop.
+"""
 
 import jax.numpy as jnp
 
 from repro.models.attention import decode_attention as _model_decode
+from repro.models.attention import paged_kv_view
 
 
 def decode_ref(q, k, v, lengths):
     # model path takes (B, 1, H, D); kernel takes (B, H, D).
     out = _model_decode(q[:, None], k, v, length=lengths)
     return out[:, 0]
+
+
+def paged_decode_ref(q, k_arena, v_arena, block_tables, lengths):
+    """jnp paged decode: contiguous per-sequence views gathered through
+    the block table, then the standard masked decode attention. Empty
+    sequences (length 0) return zeros, matching the kernel convention
+    (the model softmax would spread mass uniformly over garbage there,
+    but length 0 never reaches decode — it exists only for tests)."""
+    k = paged_kv_view(k_arena, block_tables)
+    v = paged_kv_view(v_arena, block_tables)
+    out = _model_decode(q[:, None], k, v, length=lengths)[:, 0]
+    return jnp.where((lengths > 0)[:, None, None], out, jnp.zeros_like(out))

@@ -12,6 +12,18 @@ Three execution paths share one set of weights:
 KV caches are plain pytrees: {"k": (B, S, Hkv, D), "v": ...} for GQA and
 {"ckv": (B, S, r_kv), "k_rope": (B, S, r_qk)} for MLA (the latent cache is
 exactly MLA's memory saving).
+
+Serving additionally supports PAGED caches (vLLM-style): each leaf's
+(batch, seq) front is replaced by a global block arena
+(num_blocks + 1, block_size, ...), and a per-sequence ``block_table``
+(B, T) of arena indices says which rows belong to whom. Row 0 of the
+arena is the reserved NULL sink: never allocated, it absorbs writes from
+masked/dead lanes and backs unallocated table entries, so paged updates
+need no per-slot masking. The paged decode/prefill paths gather a
+contiguous per-sequence view and run the *same* attention math as the
+contiguous paths — aligned geometry (``block_size`` dividing the rounded
+``max_len``) makes the views shape- and bit-identical, which is the
+token-equivalence contract the serve tests enforce.
 """
 
 from __future__ import annotations
@@ -27,18 +39,85 @@ from .layers import ParamSpec, apply_rope, norm_apply, norm_specs
 
 NEG_INF = -1e30
 
+#: KV cache sequence axes are rounded up to this multiple at allocation
+#: time so the flash-decode kernel never pads (= copies) the cache in HBM
+#: on the hot path, and so paged block sizes divide the row count evenly.
+KV_SEQ_ALIGN = 16
 
-def cache_row_update(cache: jax.Array, new: jax.Array, idx: jax.Array) -> jax.Array:
+#: Arena row reserved as the write sink for masked/dead lanes and the
+#: target of unallocated block-table entries. Never handed out by the
+#: BlockManager; its contents are garbage and are never read unmasked.
+NULL_BLOCK = 0
+
+
+def round_kv_len(max_len: int, block: int = KV_SEQ_ALIGN) -> int:
+    """Round a cache capacity up to the kernel/paging block multiple."""
+    return -(-int(max_len) // block) * block
+
+
+def paged_kv_view(arena: jax.Array, block_table: jax.Array) -> jax.Array:
+    """Gather a contiguous per-sequence view (B, T*block_size, ...) out of
+    a block arena (num_blocks+1, block_size, ...) via ``block_table``
+    (B, T). Rows past each sequence's length are whatever stale/null
+    blocks the table points at — callers mask by length, exactly like the
+    contiguous decode paths mask their dead tail rows."""
+    g = arena[block_table]  # (B, T, block_size, ...)
+    return g.reshape(block_table.shape[0], -1, *arena.shape[2:])
+
+
+def cache_row_update(
+    cache: jax.Array,
+    new: jax.Array,
+    idx: jax.Array,
+    *,
+    block_table: Optional[jax.Array] = None,
+) -> jax.Array:
     """Write ``new`` (B, S_new, ...) into ``cache`` (B, S, ...) at sequence
     offset ``idx`` — scalar (all rows share one write position: classic
     decode) or per-row ``(B,)`` (slot-pooled serving, where every sequence
-    in the batch sits at its own length)."""
+    in the batch sits at its own length).
+
+    With ``block_table`` (B, T), ``cache`` is a block arena
+    (num_blocks+1, block_size, ...) and the single decode row
+    (S_new == 1) is scattered to ``arena[table[b, idx//bs], idx % bs]``.
+    Dead lanes carry NULL table entries, so their writes land in the sink
+    block — no per-slot masking needed."""
     new = new.astype(cache.dtype)
+    if block_table is not None:
+        bs = cache.shape[1]
+        B = block_table.shape[0]
+        idx = jnp.broadcast_to(jnp.asarray(idx, jnp.int32), (B,))
+        bid = jnp.take_along_axis(block_table, (idx // bs)[:, None], axis=1)[:, 0]
+        return cache.at[bid, idx % bs].set(new[:, 0])
     if jnp.ndim(idx) == 0:
         return jax.lax.dynamic_update_slice_in_dim(cache, new, idx, axis=1)
     return jax.vmap(
         lambda c, n, i: jax.lax.dynamic_update_slice_in_dim(c, n, i, axis=0)
     )(cache, new, idx)
+
+
+def cache_rows_update(
+    cache: jax.Array,
+    new: jax.Array,
+    start: jax.Array,
+    *,
+    block_table: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Bulk prefill write: ``new`` (B, P, ...) rows land at sequence
+    positions ``start + [0, P)``. Contiguous caches take one dynamic
+    slice update; paged arenas scatter every row through the block table
+    (positions whose table entry is still NULL — pad-bucket overhang past
+    the reserved blocks — fall into the sink block)."""
+    new = new.astype(cache.dtype)
+    if block_table is None:
+        return jax.lax.dynamic_update_slice_in_dim(cache, new, start, axis=1)
+    B, P = new.shape[:2]
+    bs = cache.shape[1]
+    pos = start + jnp.arange(P)                       # (P,)
+    bid = block_table[:, pos // bs]                   # (B, P) gather
+    off = jnp.broadcast_to(pos % bs, (B, P))
+    rows = new.reshape(B * P, *new.shape[2:])
+    return cache.at[bid.reshape(-1), off.reshape(-1)].set(rows)
 
 
 def decode_lengths(idx: jax.Array, batch: int) -> jax.Array:
@@ -185,9 +264,12 @@ def gqa_apply(
     positions: jax.Array,
     cache: Optional[Dict] = None,
     cache_index: Optional[jax.Array] = None,
+    block_table: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[Dict]]:
     """Full GQA block. With a cache, runs one-token decode and returns the
-    updated cache; without, runs train/prefill chunked attention."""
+    updated cache; without, runs train/prefill chunked attention. With a
+    ``block_table`` the cache leaves are paged arenas; decode attends
+    against the gathered per-sequence view — same math, same bits."""
     q, k, v = _project_qkv(params, x, cfg, positions)
     if cache is None:
         causal = cfg.causal and not cfg.is_encoder
@@ -203,9 +285,13 @@ def gqa_apply(
         new_cache = None
     else:
         idx = cache_index  # int32 write position: scalar or per-row (B,)
-        ck = cache_row_update(cache["k"], k, idx)
-        cv = cache_row_update(cache["v"], v, idx)
-        out = decode_attention(q, ck, cv, length=decode_lengths(idx, x.shape[0]))
+        ck = cache_row_update(cache["k"], k, idx, block_table=block_table)
+        cv = cache_row_update(cache["v"], v, idx, block_table=block_table)
+        if block_table is not None:
+            kv_k, kv_v = paged_kv_view(ck, block_table), paged_kv_view(cv, block_table)
+        else:
+            kv_k, kv_v = ck, cv
+        out = decode_attention(q, kv_k, kv_v, length=decode_lengths(idx, x.shape[0]))
         new_cache = {"k": ck, "v": cv}
     y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
     return y, new_cache
@@ -219,28 +305,44 @@ def gqa_prefill(
     positions: jax.Array,
     cache: Dict,
     start_index: jax.Array,
+    block_table: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Dict]:
     """Cache-writing batched prefill: project the whole (B, S) chunk once,
     write its K/V rows at ``start_index``, and attend causally against the
     cache (rows past the chunk are masked by causality, rows before it are
-    an earlier chunk's prefix — chunked-prefill continuation is free)."""
+    an earlier chunk's prefix — chunked-prefill continuation is free).
+    Paged mode scatters the chunk's rows through the block table (bulk
+    block writes) and attends against the gathered view."""
     q, k, v = _project_qkv(params, x, cfg, positions)
-    ck = jax.lax.dynamic_update_slice_in_dim(
-        cache["k"], k.astype(cache["k"].dtype), start_index, axis=1
-    )
-    cv = jax.lax.dynamic_update_slice_in_dim(
-        cache["v"], v.astype(cache["v"].dtype), start_index, axis=1
-    )
+    ck = cache_rows_update(cache["k"], k, start_index, block_table=block_table)
+    cv = cache_rows_update(cache["v"], v, start_index, block_table=block_table)
+    if block_table is not None:
+        kv_k, kv_v = paged_kv_view(ck, block_table), paged_kv_view(cv, block_table)
+    else:
+        kv_k, kv_v = ck, cv
     out = mea_attention(
-        q, ck, cv, causal=True, chunk=cfg.attn_chunk, q_offset=start_index
+        q, kv_k, kv_v, causal=True, chunk=cfg.attn_chunk, q_offset=start_index
     )
     y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
     return y, {"k": ck, "v": cv}
 
 
-def gqa_cache_spec(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, ParamSpec]:
-    shape = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
-    axes = ("act_batch", "act_kv_seq", "kv_heads", "head_dim")
+def gqa_cache_spec(
+    cfg: ModelConfig,
+    batch: int,
+    max_len: int,
+    page: Optional[Tuple[int, int]] = None,
+) -> Dict[str, ParamSpec]:
+    """``page=(num_blocks, block_size)`` swaps the per-slot (batch, seq)
+    stripe for a global arena (num_blocks + 1, block_size, ...) — one
+    extra row for the NULL sink block."""
+    if page is not None:
+        num_blocks, block_size = page
+        shape = (num_blocks + 1, block_size, cfg.n_kv_heads, cfg.head_dim)
+        axes = ("kv_blocks", "kv_block", "kv_heads", "head_dim")
+    else:
+        shape = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+        axes = ("act_batch", "act_kv_seq", "kv_heads", "head_dim")
     return {
         "k": ParamSpec(shape, axes, "zeros", cfg.dtype),
         "v": ParamSpec(shape, axes, "zeros", cfg.dtype),
@@ -307,6 +409,7 @@ def mla_apply(
     cache: Optional[Dict] = None,
     cache_index: Optional[jax.Array] = None,
     absorb: bool = False,
+    block_table: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[Dict]]:
     """MLA attention. ``absorb=True`` runs decode in latent space (the
     W_UK/W_UV absorption trick) — a §Perf optimization, baseline expands."""
@@ -326,9 +429,17 @@ def mla_apply(
 
     # Decode: cache holds the LATENT stream (B, S, r_kv) + rope keys.
     idx = cache_index
-    c_ckv = cache_row_update(cache["ckv"], ckv, idx)
-    c_rope = cache_row_update(cache["k_rope"], k_rope[:, :, 0, :], idx)
-    new_cache = {"ckv": c_ckv, "k_rope": c_rope}
+    new_cache = {
+        "ckv": cache_row_update(cache["ckv"], ckv, idx, block_table=block_table),
+        "k_rope": cache_row_update(
+            cache["k_rope"], k_rope[:, :, 0, :], idx, block_table=block_table
+        ),
+    }
+    if block_table is not None:
+        c_ckv = paged_kv_view(new_cache["ckv"], block_table)
+        c_rope = paged_kv_view(new_cache["k_rope"], block_table)
+    else:
+        c_ckv, c_rope = new_cache["ckv"], new_cache["k_rope"]
     S = c_ckv.shape[1]
     length = decode_lengths(idx, B)
     pos_mask = jnp.arange(S)[None, :] < length[:, None]
@@ -377,18 +488,25 @@ def mla_prefill(
     positions: jax.Array,
     cache: Dict,
     start_index: jax.Array,
+    block_table: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Dict]:
     """Cache-writing batched MLA prefill: write the latent stream for the
     whole chunk, then attend via the expanded path (see ``gqa_prefill``)."""
     m: MLAConfig = cfg.mla
     q_nope, q_rope, ckv, k_rope = _mla_qkv(params, x, cfg, positions)
-    c_ckv = jax.lax.dynamic_update_slice_in_dim(
-        cache["ckv"], ckv.astype(cache["ckv"].dtype), start_index, axis=1
-    )
-    c_rope = jax.lax.dynamic_update_slice_in_dim(
-        cache["k_rope"], k_rope[:, :, 0, :].astype(cache["k_rope"].dtype),
-        start_index, axis=1,
-    )
+    new_cache = {
+        "ckv": cache_rows_update(
+            cache["ckv"], ckv, start_index, block_table=block_table
+        ),
+        "k_rope": cache_rows_update(
+            cache["k_rope"], k_rope[:, :, 0, :], start_index, block_table=block_table
+        ),
+    }
+    if block_table is not None:
+        c_ckv = paged_kv_view(new_cache["ckv"], block_table)
+        c_rope = paged_kv_view(new_cache["k_rope"], block_table)
+    else:
+        c_ckv, c_rope = new_cache["ckv"], new_cache["k_rope"]
     k_nope, v = _mla_expand_kv(params, c_ckv, cfg)
     B, S, H = x.shape[0], c_ckv.shape[1], cfg.n_heads
     k_rope_b = jnp.broadcast_to(
@@ -400,22 +518,26 @@ def mla_prefill(
         q_full, k_full, v, causal=True, chunk=cfg.attn_chunk, q_offset=start_index
     )
     y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
-    return y, {"ckv": c_ckv, "k_rope": c_rope}
+    return y, new_cache
 
 
-def mla_cache_spec(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, ParamSpec]:
+def mla_cache_spec(
+    cfg: ModelConfig,
+    batch: int,
+    max_len: int,
+    page: Optional[Tuple[int, int]] = None,
+) -> Dict[str, ParamSpec]:
     m: MLAConfig = cfg.mla
+    if page is not None:
+        num_blocks, block_size = page
+        front, axes2 = (num_blocks + 1, block_size), ("kv_blocks", "kv_block")
+    else:
+        front, axes2 = (batch, max_len), ("act_batch", "act_kv_seq")
     return {
         "ckv": ParamSpec(
-            (batch, max_len, m.kv_lora_rank),
-            ("act_batch", "act_kv_seq", None),
-            "zeros",
-            cfg.dtype,
+            (*front, m.kv_lora_rank), (*axes2, None), "zeros", cfg.dtype
         ),
         "k_rope": ParamSpec(
-            (batch, max_len, m.qk_rope_head_dim),
-            ("act_batch", "act_kv_seq", None),
-            "zeros",
-            cfg.dtype,
+            (*front, m.qk_rope_head_dim), (*axes2, None), "zeros", cfg.dtype
         ),
     }

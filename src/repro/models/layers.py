@@ -30,6 +30,7 @@ __all__ = [
     "abstract_from_specs",
     "count_specs",
     "batch_axis_of",
+    "is_paged_spec",
     "slot_read",
     "slot_write",
     "slot_reset",
@@ -124,10 +125,25 @@ def count_specs(specs) -> int:
 # where the slot axis lives and what a freshly reset slot contains
 # (``init`` is "zeros" for KV rows but "ones" for e.g. the sLSTM
 # normalizer), so every helper here walks (values, specs) together.
+#
+# Paged leaves (block-table KV arenas, axes carrying "kv_blocks" /
+# "kv_block" instead of "act_batch"/"act_kv_seq") have NO per-slot rows:
+# slot membership lives in the host-side block table, not the array
+# layout. Every helper treats them as global state — read passes the
+# arena through, write replaces it, reset/take are no-ops (freed blocks
+# are recycled by the BlockManager; defrag never moves paged rows), and
+# mask-select keeps the new arena (dead-lane writes land in the reserved
+# null block by construction, so there is nothing to mask).
 # ---------------------------------------------------------------------------
 
 def _is_spec(x) -> bool:
     return isinstance(x, ParamSpec)
+
+
+def is_paged_spec(spec: ParamSpec) -> bool:
+    """True for block-arena cache leaves (slot axis replaced by a
+    (kv_blocks, kv_block) pair addressed through a block table)."""
+    return "kv_blocks" in spec.axes
 
 
 def batch_axis_of(spec: ParamSpec) -> int:
@@ -137,24 +153,36 @@ def batch_axis_of(spec: ParamSpec) -> int:
 
 def slot_read(caches, specs, slot) -> "jax.Array":
     """Extract one slot as a batch-1 cache pytree (for chunked prefill
-    continuation: read the slot, extend it, write it back)."""
+    continuation: read the slot, extend it, write it back). Paged arenas
+    pass through whole — the slot's rows are found via its block table."""
     def read(c, s):
+        if is_paged_spec(s):
+            return c
         ax = batch_axis_of(s)
         return jax.lax.dynamic_slice_in_dim(c, slot, 1, axis=ax)
     return jax.tree.map(read, caches, specs, is_leaf=_is_spec)
 
 
 def slot_write(caches, specs, slot, slot_caches):
-    """Write a batch-1 cache pytree into slot ``slot`` of a pooled cache."""
+    """Write a batch-1 cache pytree into slot ``slot`` of a pooled cache.
+    Paged arena leaves were mutated in place (functionally) by the
+    prefill that produced ``slot_caches`` — adopt them wholesale."""
     def write(c, s, v):
+        if is_paged_spec(s):
+            return v.astype(c.dtype)
         ax = batch_axis_of(s)
         return jax.lax.dynamic_update_slice_in_dim(c, v.astype(c.dtype), slot, axis=ax)
     return jax.tree.map(write, caches, specs, slot_caches, is_leaf=_is_spec)
 
 
 def slot_reset(caches, specs, slot):
-    """Restore one slot to its spec-defined initial value (zeros/ones)."""
+    """Restore one slot to its spec-defined initial value (zeros/ones).
+    Paged leaves are untouched: freeing a slot returns its blocks to the
+    manager, and stale rows are overwritten on reallocation (the same
+    lazy-reuse discipline as contiguous slots)."""
     def reset(c, s):
+        if is_paged_spec(s):
+            return c
         ax = batch_axis_of(s)
         shape = list(c.shape)
         shape[ax] = 1
@@ -166,8 +194,12 @@ def slot_reset(caches, specs, slot):
 
 
 def slot_take(caches, specs, perm):
-    """Permute slots (defrag: compact live slots to the low indices)."""
+    """Permute slots (defrag: compact live slots to the low indices).
+    Paged leaves are a no-op: block tables are host arrays that permute
+    for free, so defrag never gathers arena rows."""
     def take(c, s):
+        if is_paged_spec(s):
+            return c
         return jnp.take(c, perm, axis=batch_axis_of(s))
     return jax.tree.map(take, caches, specs, is_leaf=_is_spec)
 
@@ -175,8 +207,12 @@ def slot_take(caches, specs, perm):
 def slot_mask_select(mask, new_caches, old_caches, specs):
     """Per-slot select: where ``mask`` (n_slots,) is True take the new
     leaf rows, else keep the old — the serving analogue of the fastest-k
-    ``worker_mask`` (occupancy enters as data, shapes never change)."""
+    ``worker_mask`` (occupancy enters as data, shapes never change).
+    Paged arenas always take the new value: masked lanes' writes were
+    routed to the null sink block, so live rows are already correct."""
     def sel(n, o, s):
+        if is_paged_spec(s):
+            return n
         ax = batch_axis_of(s)
         shape = [1] * n.ndim
         shape[ax] = n.shape[ax]

@@ -47,12 +47,13 @@ def _block_decode(
     positions: jax.Array,
     cache: Dict,
     cache_index: jax.Array,
+    block_tables: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Dict]:
     if kind in ("dense", "parallel", "moe"):
         h = norm_apply(params["attn_norm"], x, cfg.norm)
         a, new_cache = attn.gqa_apply(
             params["attn"], h, cfg, positions=positions,
-            cache=cache, cache_index=cache_index,
+            cache=cache, cache_index=cache_index, block_table=block_tables,
         )
         if kind == "parallel":
             f = mlp_apply(params["ffn"], h, cfg.act, cfg.glu)
@@ -69,6 +70,7 @@ def _block_decode(
         a, new_cache = attn.mla_apply(
             params["attn"], h, cfg, positions=positions,
             cache=cache, cache_index=cache_index, absorb=cfg.mla_absorb,
+            block_table=block_tables,
         )
         x = x + a
         h = norm_apply(params["mlp_norm"], x, cfg.norm)
@@ -102,6 +104,7 @@ def _block_prefill(
     positions: jax.Array,
     cache: Dict,
     start_index: jax.Array,
+    block_tables: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Dict]:
     """Multi-token block forward that also writes the block's cache rows
     (the serving prefill; mirrors ``_block_decode`` with S > 1)."""
@@ -109,7 +112,7 @@ def _block_prefill(
         h = norm_apply(params["attn_norm"], x, cfg.norm)
         a, new_cache = attn.gqa_prefill(
             params["attn"], h, cfg, positions=positions,
-            cache=cache, start_index=start_index,
+            cache=cache, start_index=start_index, block_table=block_tables,
         )
         if kind == "parallel":
             f = mlp_apply(params["ffn"], h, cfg.act, cfg.glu)
@@ -125,7 +128,7 @@ def _block_prefill(
         h = norm_apply(params["attn_norm"], x, cfg.norm)
         a, new_cache = attn.mla_prefill(
             params["attn"], h, cfg, positions=positions,
-            cache=cache, start_index=start_index,
+            cache=cache, start_index=start_index, block_table=block_tables,
         )
         x = x + a
         h = norm_apply(params["mlp_norm"], x, cfg.norm)
@@ -138,12 +141,12 @@ def _block_prefill(
 
 
 def _block_cache_specs(
-    cfg: ModelConfig, kind: str, batch: int, max_len: int
+    cfg: ModelConfig, kind: str, batch: int, max_len: int, page=None
 ) -> Optional[Dict]:
     if kind in ("dense", "parallel", "moe"):
-        return attn.gqa_cache_spec(cfg, batch, max_len)
+        return attn.gqa_cache_spec(cfg, batch, max_len, page)
     if kind in ("mla_dense", "mla_moe"):
-        return attn.mla_cache_spec(cfg, batch, max_len)
+        return attn.mla_cache_spec(cfg, batch, max_len, page)
     if kind == "mlstm":
         return xlstm.mlstm_state_spec(cfg, batch)
     if kind == "slstm":
@@ -297,13 +300,35 @@ class Model:
         return _masked_ce(logits2, labels2, mask2)
 
     # -- serving ---------------------------------------------------------------
-    def cache_specs(self, batch: int, max_len: int):
+    def cache_specs(
+        self,
+        batch: int,
+        max_len: int,
+        *,
+        block_size: Optional[int] = None,
+        num_blocks: int = 0,
+    ):
+        """Cache spec tree for ``batch`` sequences of up to ``max_len``
+        tokens. The sequence axis is rounded up to ``attn.KV_SEQ_ALIGN``
+        once, here, at allocation time — so the flash-decode kernel never
+        pads (copies) the cache in HBM per tick, and paged block sizes
+        tile the rows evenly.
+
+        ``block_size`` switches leaves that carry a sequence axis to the
+        paged arena layout ((num_blocks + 1, block_size, ...) addressed
+        through block tables); leaves without one — recurrent conv/SSM/
+        xLSTM states — keep their contiguous per-slot layout in either
+        mode, behind the same pool API."""
         cfg = self.cfg
+        max_len = attn.round_kv_len(max_len)
+        page = None
+        if block_size is not None:
+            page = (num_blocks, block_size)
         if cfg.family in ("ssm", "hybrid"):
-            return zamba.zamba_cache_specs(cfg, batch, max_len)
+            return zamba.zamba_cache_specs(cfg, batch, max_len, page)
         out = []
         for seg in self.segments:
-            single = _block_cache_specs(cfg, seg.kind, batch, max_len)
+            single = _block_cache_specs(cfg, seg.kind, batch, max_len, page)
             if seg.count > 1:
                 single = jax.tree.map(
                     lambda s: ParamSpec(
@@ -315,10 +340,22 @@ class Model:
             out.append(single)
         return out
 
-    def blank_caches(self, batch: int, max_len: int):
+    def blank_caches(
+        self,
+        batch: int,
+        max_len: int,
+        *,
+        block_size: Optional[int] = None,
+        num_blocks: int = 0,
+    ):
         """Freshly initialized caches (cache specs are deterministic
         zeros/ones fills, so no meaningful randomness is consumed)."""
-        return init_from_specs(jax.random.PRNGKey(0), self.cache_specs(batch, max_len))
+        return init_from_specs(
+            jax.random.PRNGKey(0),
+            self.cache_specs(
+                batch, max_len, block_size=block_size, num_blocks=num_blocks
+            ),
+        )
 
     @functools.cached_property
     def fused_prefill(self) -> bool:
@@ -345,6 +382,7 @@ class Model:
         caches,
         length: Optional[jax.Array] = None,    # (B,) valid tokens per row
         start_index: jax.Array = 0,            # scalar: first write position
+        block_tables: Optional[jax.Array] = None,  # (B, T) paged arenas
     ):
         """Batched cache-writing prefill -> (last-valid logits (B,1,V), caches).
 
@@ -354,7 +392,9 @@ class Model:
         and their stale cache rows are masked by decode's length mask).
         Recurrent/hybrid stacks scan the decode step with per-row update
         masking so pad tokens never touch the state. ``start_index > 0``
-        continues a partially prefilled cache (chunked prefill)."""
+        continues a partially prefilled cache (chunked prefill). With
+        ``block_tables`` the sequence-axis cache leaves are paged arenas
+        and the chunk's rows are written as bulk block scatters."""
         cfg = self.cfg
         B, P = inputs.shape
         start_index = jnp.asarray(start_index, jnp.int32)
@@ -373,6 +413,7 @@ class Model:
                     h, nc = _block_prefill(
                         seg_params, h, cfg, seg.kind, positions=positions,
                         cache=seg_cache, start_index=start_index,
+                        block_tables=block_tables,
                     )
                 else:
                     def scan_fn(carry, xs):
@@ -380,6 +421,7 @@ class Model:
                         h2, nc = _block_prefill(
                             layer, carry, cfg, seg.kind, positions=positions,
                             cache=cache, start_index=start_index,
+                            block_tables=block_tables,
                         )
                         return h2, nc
                     h, nc = jax.lax.scan(scan_fn, h, (seg_params, seg_cache))
@@ -392,13 +434,19 @@ class Model:
         # Recurrent/hybrid fallback: scan the decode step over the chunk,
         # masking cache updates (and the returned logits) past each row's
         # true length. Exactly equivalent to feeding the unpadded prompt.
-        specs = self.cache_specs(B, 2)  # axes metadata only; sizes unused
+        # (Paged KV leaves skip the mask: pad-token writes land at rows
+        # past the row's length, which every read masks out — identical
+        # to the contiguous path's masked tail.)
+        specs = self.cache_specs(  # axes metadata only; sizes unused
+            B, 2, block_size=1 if block_tables is not None else None
+        )
 
         def body(carry, xs):
             caches_c, last_logits = carry
             tok, t = xs
             logits, new_caches = self.decode_step(
-                params, tok[:, None], caches_c, start_index + t
+                params, tok[:, None], caches_c, start_index + t,
+                block_tables=block_tables,
             )
             valid = t < length
             caches_c = slot_mask_select(valid, new_caches, caches_c, specs)
@@ -417,6 +465,7 @@ class Model:
         token: jax.Array,          # (B, 1) int32
         caches,
         cache_index: jax.Array,    # int32 current length: scalar or (B,)
+        block_tables: Optional[jax.Array] = None,  # (B, T): paged KV arenas
     ):
         cfg = self.cfg
         x = params["embed"][token]
@@ -430,6 +479,7 @@ class Model:
             h, new_caches = zamba.zamba_decode(
                 params["stack"], x, cfg, caches,
                 positions=positions, cache_index=cache_index,
+                block_tables=block_tables,
             )
         else:
             new_caches = []
@@ -439,6 +489,7 @@ class Model:
                     h, nc = _block_decode(
                         seg_params, h, cfg, seg.kind,
                         positions=positions, cache=seg_cache, cache_index=cache_index,
+                        block_tables=block_tables,
                     )
                 else:
                     def scan_fn(carry, xs):
@@ -446,6 +497,7 @@ class Model:
                         h2, nc = _block_decode(
                             layer, carry, cfg, seg.kind,
                             positions=positions, cache=cache, cache_index=cache_index,
+                            block_tables=block_tables,
                         )
                         return h2, nc
                     h, nc = jax.lax.scan(scan_fn, h, (seg_params, seg_cache))

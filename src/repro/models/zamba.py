@@ -96,6 +96,7 @@ def _shared_block(
     positions: jax.Array,
     cache: Optional[Dict] = None,
     cache_index: Optional[jax.Array] = None,
+    block_table: Optional[jax.Array] = None,
 ):
     """One invocation of the shared attention+MLP block. ``lora`` holds
     this invocation's adapters (already sliced from the stacks)."""
@@ -117,10 +118,15 @@ def _shared_block(
     if cache is None:
         o = attn.mea_attention(q, k, v, causal=True, chunk=cfg.attn_chunk)
     else:
-        ck = attn.cache_row_update(cache["k"], k, cache_index)
-        cv = attn.cache_row_update(cache["v"], v, cache_index)
+        ck = attn.cache_row_update(cache["k"], k, cache_index, block_table=block_table)
+        cv = attn.cache_row_update(cache["v"], v, cache_index, block_table=block_table)
+        if block_table is not None:
+            kv_k = attn.paged_kv_view(ck, block_table)
+            kv_v = attn.paged_kv_view(cv, block_table)
+        else:
+            kv_k, kv_v = ck, cv
         o = attn.decode_attention(
-            q, ck, cv, length=attn.decode_lengths(cache_index, h.shape[0])
+            q, kv_k, kv_v, length=attn.decode_lengths(cache_index, h.shape[0])
         )
         new_cache = {"k": ck, "v": cv}
     t = t + jnp.einsum("bshk,hkd->bsd", o, params["wo"])
@@ -203,6 +209,7 @@ def zamba_decode(
     *,
     positions: jax.Array,
     cache_index: jax.Array,
+    block_tables: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Dict]:
     x0 = x
     h = x
@@ -222,6 +229,7 @@ def zamba_decode(
                 delta, new_cache = _shared_block(
                     params["shared"], h, x0, cfg, _lora_slice(params["shared"], inv),
                     positions=positions, cache=cache, cache_index=cache_index,
+                    block_table=block_tables,
                 )
                 h = h + delta
                 new_attn_caches.append(new_cache)
@@ -230,7 +238,16 @@ def zamba_decode(
     return h, {"mamba": stack(new_mamba_states), "attn": stack(new_attn_caches)}
 
 
-def zamba_cache_specs(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+def zamba_cache_specs(
+    cfg: ModelConfig,
+    batch: int,
+    max_len: int,
+    page: Optional[Tuple[int, int]] = None,
+) -> Dict:
+    """Hybrid cache: recurrent Mamba2 states stay contiguous per-slot in
+    every mode (no sequence axis to page); only the shared block's KV
+    rows move into a block arena when ``page=(num_blocks, block_size)``
+    is given — one arena row per (invocation, block)."""
     n_inv = n_shared_invocations(cfg)
     dw = _shared_width(cfg)
     hd = dw // cfg.n_heads
@@ -239,16 +256,15 @@ def zamba_cache_specs(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
         mamba2.mamba2_state_spec(cfg, batch),
         is_leaf=lambda x: isinstance(x, ParamSpec),
     )
+    if page is not None:
+        num_blocks, block_size = page
+        front = (n_inv, num_blocks + 1, block_size)
+        axes = ("layers", "kv_blocks", "kv_block", "heads", "head_dim")
+    else:
+        front = (n_inv, batch, max_len)
+        axes = ("layers", "act_batch", "act_kv_seq", "heads", "head_dim")
     attn_cache = {
-        "k": ParamSpec(
-            (n_inv, batch, max_len, cfg.n_heads, hd),
-            ("layers", "act_batch", "act_kv_seq", "heads", "head_dim"),
-            "zeros", cfg.dtype,
-        ),
-        "v": ParamSpec(
-            (n_inv, batch, max_len, cfg.n_heads, hd),
-            ("layers", "act_batch", "act_kv_seq", "heads", "head_dim"),
-            "zeros", cfg.dtype,
-        ),
+        "k": ParamSpec((*front, cfg.n_heads, hd), axes, "zeros", cfg.dtype),
+        "v": ParamSpec((*front, cfg.n_heads, hd), axes, "zeros", cfg.dtype),
     }
     return {"mamba": mamba_state, "attn": attn_cache}

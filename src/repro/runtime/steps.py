@@ -190,14 +190,18 @@ def make_prefill_step(model: Model) -> Callable:
 def make_slot_prefill_step(model: Model) -> Callable:
     """Cache-writing batched prefill for the serving engine.
 
-    (params, inputs (B,P) right-padded, caches, length (B,), start_index)
-    -> (last-valid logits (B,1,V), caches). Like the fastest-k
-    ``worker_mask``, the ragged-length information enters as DATA — one
-    compile per (B, P-bucket) shape, re-used across every admission."""
+    (params, inputs (B,P) right-padded, caches, length (B,), start_index,
+    [block_tables]) -> (last-valid logits (B,1,V), caches). Like the
+    fastest-k ``worker_mask``, the ragged-length information enters as
+    DATA — one compile per (B, P-bucket) shape, re-used across every
+    admission. ``block_tables`` (B, T) routes the chunk's cache rows
+    through paged arenas (None = contiguous slot stripes)."""
 
-    def slot_prefill_step(params, inputs, caches, length, start_index):
+    def slot_prefill_step(params, inputs, caches, length, start_index,
+                          block_tables=None):
         return model.prefill_with_cache(
-            params, inputs, caches, length=length, start_index=start_index
+            params, inputs, caches, length=length, start_index=start_index,
+            block_tables=block_tables,
         )
 
     return slot_prefill_step
@@ -218,8 +222,10 @@ def make_slot_decode_step(model: Model) -> Callable:
     (their writes land in dead rows and are overwritten at allocation),
     so occupancy never changes the compiled shape."""
 
-    def slot_decode_step(params, tokens, caches, cache_index):
-        return model.decode_step(params, tokens, caches, cache_index)
+    def slot_decode_step(params, tokens, caches, cache_index, block_tables=None):
+        return model.decode_step(
+            params, tokens, caches, cache_index, block_tables=block_tables
+        )
 
     return slot_decode_step
 

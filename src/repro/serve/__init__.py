@@ -5,13 +5,15 @@ The training side of this repo prices every scheduling decision with the
 expected k-th order statistic of worker response times; this package
 applies the same machinery to a second workload: serving. A fixed-shape
 slot pool + masked decode tick give recompile-free continuous batching
-(engine/kv_pool/scheduler), and a multi-replica router prices hedged
-dispatch with ``expected_kth`` against EWMA straggler telemetry
-(router).
+(engine/kv_pool/scheduler), the KV cache optionally pages into a global
+block arena with admit-by-budget admission so memory tracks live tokens
+(kv_pool.BlockManager, DESIGN.md §11), and a multi-replica router
+prices hedged dispatch with ``expected_kth`` against EWMA straggler
+telemetry (router).
 """
 
 from .engine import EngineStats, ServeEngine, generate_offline, run_static
-from .kv_pool import SlotPool
+from .kv_pool import BlockManager, SlotPool
 from .router import DispatchOutcome, HedgedRouter, HedgePlan, ReplicaSet
 from .scheduler import CostModel, EventClock, Request, Scheduler, next_bucket
 
@@ -21,6 +23,7 @@ __all__ = [
     "generate_offline",
     "run_static",
     "SlotPool",
+    "BlockManager",
     "Scheduler",
     "Request",
     "CostModel",

@@ -17,12 +17,20 @@ correctness contract that makes the scheduler/pool machinery trustable.
 kernels, same pool, but admissions barrier until the whole previous
 batch drains (classic static batching — finished lanes ride dead until
 the longest request completes).
+
+Paged mode (``block_size=...``): sequence-axis cache leaves live in a
+global block arena addressed through per-slot block tables, admission
+switches from "a free slot" to "enough free blocks for the request's
+whole token budget" (admit-by-budget: requests queue under arena
+pressure and re-enter as finishing requests return blocks), and KV
+memory tracks live tokens instead of ``n_slots * max_len`` stripes.
+Greedy tokens stay byte-identical to the contiguous engine and to
+offline decode — paging is a layout change, not a math change.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
 from typing import Dict, List, Optional, Tuple
 
@@ -30,10 +38,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.layers import slot_mask_select
+from repro.models.layers import ParamSpec, is_paged_spec, slot_mask_select
 from repro.runtime.steps import make_slot_decode_step, make_slot_prefill_step
 
-from .kv_pool import SlotPool
+from .kv_pool import SlotPool, model_scoped_cache
 from .scheduler import CostModel, EventClock, Request, Scheduler, next_bucket
 
 __all__ = ["ServeEngine", "EngineStats", "generate_offline", "run_static"]
@@ -57,19 +65,26 @@ class EngineStats:
         return self.generated_tokens / max(self.wall_seconds, 1e-12)
 
 
-@functools.lru_cache(maxsize=None)
-def _engine_steps(model, n_slots: int, max_len: int):
+@model_scoped_cache
+def _engine_steps(model, n_slots: int, max_len: int,
+                  block_size: Optional[int], arena_blocks: int):
     """Jitted prefill/decode shared across every engine of the same
-    geometry (per-instance jax.jit closures would re-trace each time a
-    new engine is built — benchmarks build several)."""
-    specs = model.cache_specs(n_slots, max_len)
+    geometry on the same model (per-instance jax.jit closures would
+    re-trace each time a new engine is built — benchmarks build
+    several). Cached on the model instance, not a module global, so a
+    dropped model releases its traces."""
+    specs = model.cache_specs(
+        n_slots, max_len, block_size=block_size, num_blocks=arena_blocks
+    )
     prefill = make_slot_prefill_step(model)
     decode = make_slot_decode_step(model)
 
-    def decode_tick(params, tokens, caches, positions, mask):
-        logits, new_caches = decode(params, tokens, caches, positions)
+    def decode_tick(params, tokens, caches, positions, mask, tables=None):
+        logits, new_caches = decode(params, tokens, caches, positions, tables)
         # Lanes not decoding (free / mid-prefill) must not mutate
         # state: recurrent leaves would otherwise absorb garbage.
+        # (Paged leaves skip the select — dead-lane writes went to the
+        # NULL sink block via their zeroed block tables.)
         return logits, slot_mask_select(mask, new_caches, caches, specs)
 
     return jax.jit(prefill), jax.jit(decode_tick)
@@ -85,12 +100,20 @@ class ServeEngine:
         max_len: int,
         scheduler: Optional[Scheduler] = None,
         prefill_bucket: int = 16,
+        block_size: Optional[int] = None,
+        arena_blocks: Optional[int] = None,
     ):
+        """``block_size`` turns on paged KV (see module docstring);
+        ``arena_blocks`` caps the arena below full capacity to serve
+        under an explicit memory budget (admit-by-budget queuing)."""
         if model.cfg.is_encoder:
             raise ValueError("serving needs a causal decoder architecture")
         self.model = model
         self.params = params
-        self.pool = SlotPool(model, n_slots, max_len)
+        self.pool = SlotPool(
+            model, n_slots, max_len,
+            block_size=block_size, arena_blocks=arena_blocks,
+        )
         self.sched = scheduler or Scheduler(n_slots)
         self.prefill_bucket = prefill_bucket
         self.stats = EngineStats()
@@ -100,8 +123,17 @@ class ServeEngine:
         # Per-slot decode state (host side).
         self._pending = np.zeros(n_slots, np.int32)   # next token to feed
         self._decoding = np.zeros(n_slots, bool)      # prefill done, generating
-        self._blank1 = model.blank_caches(1, max_len)
-        self._prefill, self._decode = _engine_steps(model, n_slots, max_len)
+        # Fresh batch-1 caches for a slot's first prefill chunk. Paged
+        # mode keeps only the contiguous (recurrent-state) leaves — the
+        # arena leaves are stand-ins (num_blocks=0 = just the NULL row)
+        # swapped for the pool's real arenas at call time.
+        self._blank1 = model.blank_caches(
+            1, max_len, block_size=block_size, num_blocks=0
+        )
+        self._prefill, self._decode = _engine_steps(
+            model, n_slots, max_len, block_size,
+            0 if self.pool.manager is None else self.pool.manager.num_blocks,
+        )
 
     # -- submission ----------------------------------------------------------
     def submit(
@@ -113,6 +145,16 @@ class ServeEngine:
                 f"prompt({prompt.size}) + max_new_tokens({max_new_tokens}) "
                 f"exceeds max_len({self.pool.max_len})"
             )
+        if self.pool.paged:
+            mgr = self.pool.manager
+            need = mgr.blocks_for(prompt.size + max_new_tokens)
+            if need > mgr.num_blocks:
+                # Reject outright: a request bigger than the whole arena
+                # could never be admitted, even with the pool idle.
+                raise ValueError(
+                    f"request needs {need} blocks but the arena has only "
+                    f"{mgr.num_blocks} — raise arena_blocks or block_size"
+                )
         rid = self._next_rid
         self._next_rid += 1
         req = Request(rid, prompt, int(max_new_tokens), float(arrival))
@@ -124,13 +166,34 @@ class ServeEngine:
     def _slot_of(self, rid: int) -> int:
         return self.pool.owner.index(rid)
 
+    @staticmethod
+    def _budget(req: Request) -> int:
+        """Cache rows a request can touch over its whole lifetime —
+        reserved in full at admission so decode never stalls on blocks."""
+        return req.prompt_len + req.max_new_tokens
+
+    def _can_admit(self, req: Request) -> bool:
+        return self.pool.can_admit(self._budget(req))
+
+    def _fresh_slot_caches(self):
+        """Batch-1 caches for a first prefill chunk: blank contiguous
+        leaves, the pool's live arenas for paged leaves (pure pytree
+        re-composition — no device work)."""
+        if not self.pool.paged:
+            return self._blank1
+        return jax.tree.map(
+            lambda s, pooled, blank: pooled if is_paged_spec(s) else blank,
+            self.pool.specs, self.pool.caches, self._blank1,
+            is_leaf=lambda x: isinstance(x, ParamSpec),
+        )
+
     def _do_prefill(self, req: Request) -> None:
         sched, pool = self.sched, self.pool
         if req.prefilled == 0:
             sched.on_admit(req)
-            slot = pool.allocate(owner=req.rid)
-            assert slot is not None, "scheduler admitted without a free slot"
-            slot_caches = self._blank1
+            slot = pool.allocate(owner=req.rid, n_tokens=self._budget(req))
+            assert slot is not None, "scheduler admitted without slot/blocks"
+            slot_caches = self._fresh_slot_caches()
         else:
             slot = self._slot_of(req.rid)
             slot_caches = pool.read_slot(slot)
@@ -143,12 +206,16 @@ class ServeEngine:
         bucket = min(next_bucket(n_tok, self.prefill_bucket), pool.max_len - start)
         chunk = np.zeros((1, bucket), np.int32)
         chunk[0, :n_tok] = req.prompt[start : start + n_tok]
+        # Lazily grow the slot's block table to cover the chunk's real
+        # rows (bucket overhang past them falls into the NULL sink).
+        pool.ensure_rows(slot, start + n_tok)
         logits, slot_caches = self._prefill(
             self.params,
             jnp.asarray(chunk),
             slot_caches,
             jnp.asarray([n_tok], jnp.int32),
             jnp.int32(start),
+            pool.tables_device(slot),
         )
         pool.write_slot(slot, slot_caches, position=start + n_tok)
         done = start + n_tok >= req.prompt_len
@@ -170,8 +237,14 @@ class ServeEngine:
         mask = self._decoding.copy()
         tokens = jnp.asarray(self._pending[:, None])
         positions = jnp.asarray(np.clip(pool.positions, 0, pool.max_len - 1))
+        # Each decoding lane writes one row at its position: grow its
+        # block table first. Never fails — admission committed the whole
+        # budget, so the blocks are guaranteed to be available.
+        for slot in np.nonzero(mask)[0]:
+            pool.ensure_rows(int(slot), int(pool.positions[slot]) + 1)
         logits, pool.caches = self._decode(
-            self.params, tokens, pool.caches, positions, jnp.asarray(mask)
+            self.params, tokens, pool.caches, positions, jnp.asarray(mask),
+            pool.tables_device(),
         )
         self.sched.on_decode_tick()
         self.stats.decode_ticks += 1
@@ -220,7 +293,9 @@ class ServeEngine:
     # -- driver --------------------------------------------------------------
     def step(self) -> str:
         """Run one scheduler action; returns its kind."""
-        kind, req = self.sched.next_action(self.pool.n_active, self.pool.n_free)
+        kind, req = self.sched.next_action(
+            self.pool.n_active, self.pool.n_free, self._can_admit
+        )
         if kind == "prefill":
             self._do_prefill(req)
         elif kind == "decode":
@@ -244,7 +319,7 @@ class ServeEngine:
 # References: per-request offline decode + static batching baseline
 # ---------------------------------------------------------------------------
 
-@functools.lru_cache(maxsize=None)
+@model_scoped_cache
 def _offline_decode(model):
     return jax.jit(model.decode_step)
 
@@ -280,13 +355,14 @@ class _StaticScheduler(Scheduler):
         super().__init__(n_slots, clock=clock)
         self._barrier_open = True
 
-    def next_action(self, n_active: int, n_free: int):
+    def next_action(self, n_active: int, n_free: int, can_admit=None):
         if n_active == 0:
             self._barrier_open = True
         if self.running:
             return "prefill", self.running[0]
         req = self._eligible()
-        if req is not None and n_free > 0 and self._barrier_open:
+        if (req is not None and n_free > 0 and self._barrier_open
+                and (can_admit is None or can_admit(req))):
             return "prefill", req
         if n_active > 0:
             self._barrier_open = False

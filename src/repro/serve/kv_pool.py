@@ -1,4 +1,4 @@
-"""Slot-based KV/SSM cache pool.
+"""Slot-based KV/SSM cache pool, contiguous or paged.
 
 The pool owns one device-resident cache pytree shaped for ``n_slots``
 sequences of up to ``max_len`` tokens, built from ``model.cache_specs``
@@ -9,34 +9,82 @@ slot helpers in ``repro.models.layers`` (``act_batch`` marks where the
 slot axis lives in each leaf, which is NOT always axis 0 — stacked-layer
 segments put "layers" first).
 
+With ``block_size`` set, every cache leaf that carries a sequence axis
+becomes a global BLOCK ARENA shared by all slots, and a ``BlockManager``
+maps each slot's rows to arena blocks through a block table — the
+serving twin of the paper's load adaptation: decode memory tracks LIVE
+tokens instead of ``n_slots * max_len`` reserved stripes. Recurrent
+conv/SSM/xLSTM state leaves (no sequence axis) keep their contiguous
+per-slot layout behind the same API in either mode.
+
 Invariants (tested in tests/test_serve.py):
   * a slot is in exactly one of {free, active};
   * ``positions[s]`` is the next cache write index of slot ``s``;
   * freeing resets bookkeeping immediately and lazily reuses device rows
-    (the next prefill overwrites the whole slot);
-  * ``defrag()`` compacts active slots to the lowest indices with one
-    gather, preserving per-slot contents and positions.
+    (the next prefill overwrites the whole slot); paged mode additionally
+    returns the slot's blocks to the free pool INSTANTLY;
+  * a block is owned by at most one slot; arena row 0 is the NULL sink
+    (never allocated, absorbs masked-lane writes);
+  * ``defrag()`` compacts active slots to the lowest indices, gathering
+    only contiguous leaves — paged leaves never move (block tables are
+    host arrays), so for pure-attention families it is a device no-op.
 """
 
 from __future__ import annotations
 
 import functools
+import math
 from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.layers import slot_read, slot_reset, slot_take, slot_write
+from repro.models.attention import NULL_BLOCK, round_kv_len
+from repro.models.layers import (
+    DTYPES,
+    ParamSpec,
+    is_paged_spec,
+    slot_read,
+    slot_reset,
+    slot_take,
+    slot_write,
+)
 
-__all__ = ["SlotPool"]
+__all__ = ["BlockManager", "SlotPool", "model_scoped_cache"]
 
 
-@functools.lru_cache(maxsize=None)
-def _pool_ops(model, n_slots: int, max_len: int):
-    """Jitted slot ops shared across every pool of the same geometry —
-    per-instance jax.jit wrappers would re-trace for each new pool."""
-    specs = model.cache_specs(n_slots, max_len)
+def model_scoped_cache(fn):
+    """Memoize ``fn(model, *args)`` ON the model instance.
+
+    A module-level ``lru_cache`` keyed on the model would pin the model
+    (and every jitted closure tracing through it) alive for the life of
+    the process; storing the memo in the model's own ``__dict__`` ties
+    the cache — and its jit executables — to the model's lifetime, so
+    dropping the last model reference frees everything (regression test:
+    ``test_dropped_model_pool_ops_collectable``)."""
+    slot_name = f"_memo_{fn.__name__}"
+
+    @functools.wraps(fn)
+    def wrapper(model, *args):
+        cache = model.__dict__.setdefault(slot_name, {})
+        if args not in cache:
+            cache[args] = fn(model, *args)
+        return cache[args]
+
+    wrapper.cache_slot = slot_name
+    return wrapper
+
+
+@model_scoped_cache
+def _pool_ops(model, n_slots: int, max_len: int,
+              block_size: Optional[int], arena_blocks: int):
+    """Jitted slot ops shared across every pool of the same geometry on
+    the same model — per-instance jax.jit wrappers would re-trace for
+    each new pool."""
+    specs = model.cache_specs(
+        n_slots, max_len, block_size=block_size, num_blocks=arena_blocks
+    )
     return (
         specs,
         jax.jit(lambda c, s: slot_read(c, specs, s)),
@@ -46,16 +94,187 @@ def _pool_ops(model, n_slots: int, max_len: int):
     )
 
 
+class BlockManager:
+    """Host-side block allocator: one global arena of ``num_blocks``
+    usable blocks (arena row 0 is the NULL sink) and one block table row
+    per slot. Purely bookkeeping — device scatter/gather reads
+    ``tables`` as data, so allocation never recompiles anything.
+
+    Two-level discipline (what makes it both memory-proportional and
+    deadlock-free without an eviction path):
+
+      * **commit** — admission charges a slot's whole token budget
+        against the arena (``sum(committed) <= num_blocks`` always), so
+        a slot can ALWAYS grow to its budget: decode never stalls on
+        blocks mid-flight;
+      * **append** — blocks are physically allocated lazily, one block
+        at a time, as rows are actually written. The used high-water
+        therefore tracks LIVE tokens, not reserved budgets — the number
+        an allocator would really need co-resident.
+    """
+
+    def __init__(self, n_slots: int, n_rows: int, block_size: int,
+                 num_blocks: int):
+        if n_rows % block_size:
+            raise ValueError(
+                f"block_size={block_size} must divide the (aligned) cache "
+                f"rows {n_rows} so paged views match contiguous shapes"
+            )
+        self.block_size = block_size
+        self.num_blocks = num_blocks
+        self.table_width = n_rows // block_size
+        #: (n_slots, T) int32 arena indices; NULL_BLOCK marks unallocated.
+        self.tables = np.full((n_slots, self.table_width), NULL_BLOCK, np.int32)
+        # LIFO free list over ids 1..num_blocks (0 is the sink).
+        self._free: List[int] = list(range(num_blocks, 0, -1))
+        self._owned: List[List[int]] = [[] for _ in range(n_slots)]
+        self._budget: List[int] = [0] * n_slots   # committed blocks per slot
+        self.used_high_water = 0
+
+    # -- accounting ----------------------------------------------------------
+    @property
+    def n_free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_used_blocks(self) -> int:
+        return self.num_blocks - len(self._free)
+
+    @property
+    def n_committed_blocks(self) -> int:
+        return sum(self._budget)
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return math.ceil(max(int(n_tokens), 0) / self.block_size)
+
+    def can_commit(self, n_tokens: int) -> bool:
+        """Admission test: the request's whole budget must fit beside
+        every already-committed budget (worst-case accounting — this is
+        what guarantees decode-time appends can never exhaust the
+        arena), and inside one slot's table."""
+        need = self.blocks_for(n_tokens)
+        return (need <= self.table_width
+                and self.n_committed_blocks + need <= self.num_blocks)
+
+    # -- commit / append / free ----------------------------------------------
+    def commit(self, slot: int, n_tokens: int) -> None:
+        """Charge ``slot``'s lifetime token budget against the arena (no
+        blocks move yet). Raises when over-committed — callers gate
+        admission on :meth:`can_commit`."""
+        need = self.blocks_for(n_tokens)
+        if need > self.table_width:
+            raise ValueError(
+                f"{n_tokens} tokens need {need} blocks > table width "
+                f"{self.table_width} (slot capacity)"
+            )
+        if self.n_committed_blocks - self._budget[slot] + need > self.num_blocks:
+            raise ValueError(
+                f"arena over-committed: budget {need} blocks on top of "
+                f"{self.n_committed_blocks - self._budget[slot]} committed "
+                f"(capacity {self.num_blocks})"
+            )
+        self._budget[slot] = max(self._budget[slot], need)
+
+    def append(self, slot: int, n_rows: int) -> None:
+        """Grow ``slot``'s table to physically cover ``n_rows`` rows
+        (append-only; no-op when covered). Never exceeds the slot's
+        committed budget — which also makes exhaustion impossible."""
+        want = self.blocks_for(n_rows)
+        owned = self._owned[slot]
+        if want > self._budget[slot]:
+            raise ValueError(
+                f"slot {slot}: {n_rows} rows need {want} blocks > "
+                f"committed budget {self._budget[slot]}"
+            )
+        while len(owned) < want:
+            bid = self._free.pop()
+            self.tables[slot, len(owned)] = bid
+            owned.append(bid)
+        self.used_high_water = max(self.used_high_water, self.n_used_blocks)
+
+    def free(self, slot: int) -> None:
+        """Return every block of ``slot`` to the pool instantly, release
+        its budget commitment, and point its table at the NULL sink
+        (stale rows are never read again: reads mask by length, and
+        reallocation overwrites)."""
+        owned = self._owned[slot]
+        self._free.extend(reversed(owned))
+        owned.clear()
+        self._budget[slot] = 0
+        self.tables[slot, :] = NULL_BLOCK
+
+    def permute(self, order: np.ndarray) -> None:
+        """Remap slot indices (pool defrag) — pure host bookkeeping."""
+        self.tables = self.tables[order]
+        self._owned = [self._owned[int(o)] for o in order]
+        self._budget = [self._budget[int(o)] for o in order]
+
+    def check(self) -> None:
+        """Assert allocator invariants (test hook)."""
+        seen: set = set()
+        for slot, owned in enumerate(self._owned):
+            assert len(owned) <= self._budget[slot], (
+                f"slot {slot} owns {len(owned)} blocks over its budget"
+            )
+            assert list(self.tables[slot, : len(owned)]) == owned, (
+                f"slot {slot} table/owned mismatch"
+            )
+            assert all(t == NULL_BLOCK for t in self.tables[slot, len(owned):]), (
+                f"slot {slot} has table entries past its owned blocks"
+            )
+            for b in owned:
+                assert NULL_BLOCK < b <= self.num_blocks, f"bad block id {b}"
+                assert b not in seen, f"block {b} owned twice"
+                seen.add(b)
+        assert self.n_committed_blocks <= self.num_blocks, "over-committed"
+        free = set(self._free)
+        assert len(free) == len(self._free), "duplicate ids in free list"
+        assert free.isdisjoint(seen), "block both free and owned"
+        assert free | seen == set(range(1, self.num_blocks + 1)), "leaked blocks"
+
+
 class SlotPool:
-    def __init__(self, model, n_slots: int, max_len: int):
+    def __init__(
+        self,
+        model,
+        n_slots: int,
+        max_len: int,
+        *,
+        block_size: Optional[int] = None,
+        arena_blocks: Optional[int] = None,
+    ):
+        """``block_size`` switches sequence-axis cache leaves to a paged
+        arena of ``arena_blocks`` blocks (default: full capacity,
+        ``n_slots * rows / block_size`` — undersize it to serve under an
+        explicit memory budget with admit-by-budget queuing)."""
         if n_slots < 1:
             raise ValueError("need at least one slot")
         self.n_slots = n_slots
         self.max_len = max_len
+        self.rows = round_kv_len(max_len)   # aligned per-slot row capacity
+        self.block_size = block_size
+        self.paged = block_size is not None
+        if self.paged:
+            if arena_blocks is None:
+                arena_blocks = n_slots * math.ceil(self.rows / block_size)
+            self.manager: Optional[BlockManager] = BlockManager(
+                n_slots, self.rows, block_size, arena_blocks
+            )
+        else:
+            arena_blocks = 0
+            self.manager = None
         self.specs, self._read, self._write, self._reset, self._take = _pool_ops(
-            model, n_slots, max_len
+            model, n_slots, max_len, block_size, arena_blocks
         )
-        self.caches = model.blank_caches(n_slots, max_len)
+        self.caches = model.blank_caches(
+            n_slots, max_len, block_size=block_size, num_blocks=arena_blocks
+        )
+        self._spec_leaves = jax.tree.leaves(
+            self.specs, is_leaf=lambda x: isinstance(x, ParamSpec)
+        )
+        self._any_contiguous = any(
+            not is_paged_spec(s) for s in self._spec_leaves
+        )
         # Host-side occupancy. Free slots are handed out lowest-index
         # first so the engine's active lanes stay dense without defrag.
         self.positions = np.zeros(n_slots, np.int32)
@@ -74,16 +293,40 @@ class SlotPool:
     def active_mask(self) -> np.ndarray:
         return self.active.copy()
 
-    def allocate(self, owner: Optional[int] = None) -> Optional[int]:
-        """Claim the lowest free slot (or None when full)."""
+    def can_admit(self, n_tokens: int) -> bool:
+        """Admission test: a free slot AND (paged) room to commit the
+        request's whole token budget — commitment at admission is what
+        lets decode grow blocks lazily without ever stalling on arena
+        pressure mid-flight."""
+        if self.n_free == 0:
+            return False
+        return not self.paged or self.manager.can_commit(n_tokens)
+
+    def allocate(
+        self, owner: Optional[int] = None, n_tokens: Optional[int] = None
+    ) -> Optional[int]:
+        """Claim the lowest free slot (or None when full / over-committed).
+        Paged pools commit ``n_tokens`` rows of budget at admission;
+        blocks are appended lazily as rows are written (:meth:`ensure_rows`)."""
         free = np.nonzero(~self.active)[0]
         if free.size == 0:
             return None
         slot = int(free[0])
+        if self.paged:
+            budget = self.rows if n_tokens is None else int(n_tokens)
+            if not self.manager.can_commit(budget):
+                return None
+            self.manager.commit(slot, budget)
         self.active[slot] = True
         self.owner[slot] = owner
         self.positions[slot] = 0
         return slot
+
+    def ensure_rows(self, slot: int, n_rows: int) -> None:
+        """Lazily append blocks so ``slot`` physically covers ``n_rows``
+        cache rows (no-op for contiguous pools and covered slots)."""
+        if self.paged:
+            self.manager.append(slot, n_rows)
 
     def free(self, slot: int) -> None:
         if not self.active[slot]:
@@ -91,10 +334,53 @@ class SlotPool:
         self.active[slot] = False
         self.owner[slot] = None
         self.positions[slot] = 0
+        if self.paged:
+            self.manager.free(slot)
+
+    # -- paged bookkeeping ---------------------------------------------------
+    def tables_device(self, slot: Optional[int] = None) -> Optional[jax.Array]:
+        """Block tables as device data — all slots (n_slots, T) for the
+        decode tick, or one (1, T) row for a slot's prefill."""
+        if not self.paged:
+            return None
+        t = self.manager.tables if slot is None else self.manager.tables[slot:slot + 1]
+        return jnp.asarray(t)
+
+    # -- memory accounting (benchmarks) --------------------------------------
+    def kv_bytes_per_block(self) -> int:
+        """Bytes one arena block occupies across every paged leaf
+        (stacked-layer leaves count each layer's row)."""
+        total = 0
+        for s in self._spec_leaves:
+            if is_paged_spec(s):
+                n_arena = s.shape[s.axes.index("kv_blocks")]
+                total += s.size // n_arena * np.dtype(DTYPES[s.dtype]).itemsize
+        return total
+
+    def kv_bytes_contiguous(self) -> int:
+        """What the sequence-axis leaves would occupy as contiguous
+        ``n_slots * rows`` stripes (the pre-paging layout) — the baseline
+        every high-water measurement compares against."""
+        if self.paged:
+            per_block = self.kv_bytes_per_block()
+            return per_block * (self.rows // self.block_size) * self.n_slots
+        total = 0
+        for s in self._spec_leaves:
+            if "act_kv_seq" in s.axes:
+                total += s.size * np.dtype(DTYPES[s.dtype]).itemsize
+        return total
+
+    def kv_bytes_high_water(self) -> int:
+        """High-water mark of arena bytes actually reserved (+ the NULL
+        sink block) — decode KV memory proportional to live tokens."""
+        if not self.paged:
+            return self.kv_bytes_contiguous()
+        return (self.manager.used_high_water + 1) * self.kv_bytes_per_block()
 
     # -- device-side slot ops ------------------------------------------------
     def read_slot(self, slot: int):
-        """Batch-1 cache pytree for one slot (chunked-prefill continuation)."""
+        """Batch-1 cache pytree for one slot (chunked-prefill
+        continuation); paged arena leaves pass through whole."""
         return self._read(self.caches, jnp.int32(slot))
 
     def write_slot(self, slot: int, slot_caches, position: int) -> None:
@@ -104,24 +390,30 @@ class SlotPool:
         self.positions[slot] = position
 
     def reset_slot(self, slot: int) -> None:
-        """Restore one slot's device rows to the spec init values
-        (zeros for KV rows, ones for the sLSTM normalizer, ...)."""
+        """Restore one slot's contiguous device rows to the spec init
+        values (zeros for KV rows, ones for the sLSTM normalizer, ...).
+        Paged leaves are untouched — stale blocks are recycled lazily."""
         self.caches = self._reset(self.caches, jnp.int32(slot))
         self.positions[slot] = 0
 
     def defrag(self) -> Dict[int, int]:
         """Compact active slots to the lowest indices (one gather over
-        every leaf). Returns the {old_slot: new_slot} moves applied to
-        live slots. NOTE: an engine holding per-slot state on top of
-        this pool must remap it with the returned moves — use
-        ``ServeEngine.defrag()``, not this, on a live engine."""
+        the CONTIGUOUS leaves; paged leaves only permute their host-side
+        block tables, so attention-family pools defrag for free).
+        Returns the {old_slot: new_slot} moves applied to live slots.
+        NOTE: an engine holding per-slot state on top of this pool must
+        remap it with the returned moves — use ``ServeEngine.defrag()``,
+        not this, on a live engine."""
         order = np.concatenate(
             [np.nonzero(self.active)[0], np.nonzero(~self.active)[0]]
         ).astype(np.int32)
         moves = {int(old): new for new, old in enumerate(order) if int(old) != new}
         if not moves:
             return {}
-        self.caches = self._take(self.caches, jnp.asarray(order))
+        if self._any_contiguous:
+            self.caches = self._take(self.caches, jnp.asarray(order))
+        if self.paged:
+            self.manager.permute(order)
         self.positions = self.positions[order]
         self.active = self.active[order]
         self.owner = [self.owner[int(old)] for old in order]

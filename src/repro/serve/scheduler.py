@@ -124,14 +124,23 @@ class Scheduler:
         return min((r.arrival for r in self.waiting), default=None)
 
     # -- policy --------------------------------------------------------------
-    def next_action(self, n_active: int, n_free: int) -> Tuple[str, Optional[Request]]:
+    def next_action(
+        self, n_active: int, n_free: int, can_admit=None
+    ) -> Tuple[str, Optional[Request]]:
         """-> ("prefill", request) | ("decode", None) | ("idle", None) |
         ("done", None).
 
         Mid-prefill requests always finish their remaining chunks before
         new admissions (they hold a slot). A fresh admission needs a free
-        slot and a paid-down decode debt; otherwise decode if anything is
-        active; otherwise jump the clock to the next arrival.
+        slot, a paid-down decode debt, and — when the engine supplies a
+        ``can_admit(request)`` predicate (paged pools: "enough free
+        blocks for the whole token budget") — a passing budget check;
+        otherwise decode if anything is active (finishing requests
+        returns blocks, which is what unblocks a queued admission);
+        otherwise jump the clock to the next arrival. A request that
+        fails the budget check with nothing active cannot occur: submit
+        rejects requests larger than the whole arena, and an idle pool
+        has every block free.
         """
         if self.running:
             req = self.running[0]
@@ -142,7 +151,7 @@ class Scheduler:
                 return "decode", None
             return "prefill", req
         req = self._eligible()
-        if req is not None and n_free > 0:
+        if req is not None and n_free > 0 and (can_admit is None or can_admit(req)):
             if self._decode_debt > 0 and n_active > 0:
                 self._decode_debt -= 1
                 return "decode", None

@@ -118,12 +118,17 @@ def test_rmsnorm_matches_ref(shape, dtype):
 # flash decode (single-query attention over a long cache)
 # ---------------------------------------------------------------------------
 
-from repro.kernels.decode_attention import decode_ref, flash_decode  # noqa: E402
+from repro.kernels.decode_attention import (  # noqa: E402
+    decode_ref,
+    flash_decode,
+    paged_decode_ref,
+    paged_flash_decode,
+)
 
 DECODE_CASES = [
     # B, S, H, Hkv, D, block_kv
     (2, 256, 8, 2, 64, 64),
-    (1, 300, 4, 4, 128, 128),   # padding path (300 % 128 != 0)
+    (1, 320, 4, 4, 128, 64),    # non-power-of-two block count
     (3, 1024, 8, 1, 64, 512),   # MQA
 ]
 
@@ -140,6 +145,33 @@ def test_flash_decode_matches_ref(case):
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
 
 
+def test_flash_decode_never_pads_the_cache():
+    """Regression: the wrapper used to jnp.pad (= copy) the whole K/V
+    cache in HBM on every decode tick when S % block_kv != 0. Caches are
+    allocated block-aligned now (cache_specs rounds max_len up), so a
+    non-dividing request clamps to the largest dividing block — same
+    result, zero copies — and an unalignable cache is an error."""
+    q = _arr((1, 4, 32), jnp.float32)
+    k = _arr((1, 96, 2, 32), jnp.float32)
+    v = _arr((1, 96, 2, 32), jnp.float32)
+    lengths = jnp.array([57])
+    out = flash_decode(q, k, v, lengths, block_kv=64, interpret=True)  # -> 48
+    ref = decode_ref(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+    # An aligned default-blocked long cache also clamps instead of raising.
+    k2 = _arr((1, 528, 2, 32), jnp.float32)   # 528 = round_kv_len(520)
+    v2 = _arr((1, 528, 2, 32), jnp.float32)
+    out2 = flash_decode(q, k2, v2, lengths, interpret=True)  # 512 -> 264
+    np.testing.assert_allclose(
+        np.asarray(out2), np.asarray(decode_ref(q, k2, v2, lengths)), atol=2e-5
+    )
+    # No divisor >= 8 (prime length): the cache violated the alignment
+    # contract — refuse rather than silently copy it every tick.
+    k3 = _arr((1, 97, 2, 32), jnp.float32)
+    with pytest.raises(ValueError, match="block-aligned"):
+        flash_decode(q, k3, k3, lengths, block_kv=64, interpret=True)
+
+
 def test_flash_decode_length_masking_exact():
     """Entries beyond `lengths` must have zero influence."""
     B, S, H, Hkv, D = 1, 128, 4, 2, 32
@@ -152,3 +184,84 @@ def test_flash_decode_length_masking_exact():
     v2 = v.at[:, L:].set(-99.0)
     out2 = flash_decode(q, k2, v2, jnp.array([L]), block_kv=64, interpret=True)
     np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# paged flash decode (block-table arena)
+# ---------------------------------------------------------------------------
+
+def _scatter_to_arena(k, v, lengths, block_size, seed=0):
+    """Scatter contiguous (B, S, ...) caches into a shuffled block arena
+    with garbage everywhere a live block is not (the NULL sink block 0
+    and all unreferenced rows), returning (k_arena, v_arena, tables)."""
+    rng = np.random.default_rng(seed)
+    B, S = k.shape[:2]
+    T = S // block_size
+    ids = rng.permutation(B * T) + 1          # blocks shuffled, 0 = sink
+    k_arena = rng.normal(size=(B * T + 1, block_size, *k.shape[2:]))
+    v_arena = rng.normal(size=(B * T + 1, block_size, *v.shape[2:]))
+    tables = np.zeros((B, T), np.int32)
+    nxt = 0
+    for b in range(B):
+        n_live = -(-int(lengths[b]) // block_size)
+        for t in range(n_live):
+            bid = int(ids[nxt]); nxt += 1
+            tables[b, t] = bid
+            k_arena[bid] = np.asarray(k[b, t * block_size:(t + 1) * block_size])
+            v_arena[bid] = np.asarray(v[b, t * block_size:(t + 1) * block_size])
+    return (jnp.asarray(k_arena, k.dtype), jnp.asarray(v_arena, v.dtype),
+            jnp.asarray(tables))
+
+
+PAGED_CASES = [
+    # S, H, Hkv, D, block_size
+    (64, 8, 2, 64, 16),    # GQA, small blocks
+    (128, 8, 1, 64, 32),   # MQA
+    (64, 8, 8, 32, 64),    # MHA, one block per sequence
+]
+
+
+@pytest.mark.parametrize("case", PAGED_CASES)
+def test_paged_flash_decode_matches_oracles(case):
+    """Kernel vs the jnp paged oracle vs the contiguous oracle across the
+    boundary lengths {0, 1, bs-1, bs, bs+1, max} in one ragged batch.
+    Only live blocks are populated in the arena — everything else is
+    garbage, so any read past a block table's live prefix shows up."""
+    S, H, Hkv, D, bs = case
+    B = 6
+    lengths = np.array([0, 1, bs - 1, bs, min(bs + 1, S), S], np.int32)
+    q = _arr((B, H, D), jnp.float32)
+    k = _arr((B, S, Hkv, D), jnp.float32)
+    v = _arr((B, S, Hkv, D), jnp.float32)
+    k_arena, v_arena, tables = _scatter_to_arena(k, v, lengths, bs)
+    lengths = jnp.asarray(lengths)
+
+    ref = paged_decode_ref(q, k_arena, v_arena, tables, lengths)
+    out = paged_flash_decode(q, k_arena, v_arena, tables, lengths,
+                             interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+    # The paged oracle must equal the contiguous oracle bit-for-bit on
+    # live rows (this is the engine's byte-identity contract) and zero
+    # the length-0 convention rows.
+    contig = np.asarray(decode_ref(q, k, v, lengths))
+    contig = np.where(np.asarray(lengths)[:, None, None] > 0, contig, 0.0)
+    np.testing.assert_array_equal(np.asarray(ref), contig)
+
+
+def test_paged_flash_decode_ragged_gqa_sweep():
+    """Random ragged lengths x GQA group sizes (G in {1, 4, 8})."""
+    S, D, bs, B = 96, 32, 16, 4
+    for Hkv in (8, 2, 1):
+        H = 8
+        lengths = np.asarray(RNG.integers(1, S + 1, size=(B,)), np.int32)
+        q = _arr((B, H, D), jnp.float32)
+        k = _arr((B, S, Hkv, D), jnp.float32)
+        v = _arr((B, S, Hkv, D), jnp.float32)
+        k_arena, v_arena, tables = _scatter_to_arena(k, v, lengths, bs,
+                                                     seed=Hkv)
+        out = paged_flash_decode(q, k_arena, v_arena, tables,
+                                 jnp.asarray(lengths), interpret=True)
+        ref = decode_ref(q, k, v, jnp.asarray(lengths))
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=2e-5, err_msg=f"Hkv={Hkv}")

@@ -13,6 +13,9 @@ determinism, and the hedged router's order-statistics pricing
 EWMA straggler demotion).
 """
 
+import gc
+import weakref
+
 import jax
 import numpy as np
 import pytest
@@ -21,8 +24,9 @@ from repro.configs import get_config
 from repro.core.delay_models import GeneralizedDelayModel, SimplifiedDelayModel
 from repro.core.order_stats import expected_kth
 from repro.models import build_model
-from repro.models.layers import ParamSpec
+from repro.models.layers import ParamSpec, is_paged_spec
 from repro.serve import (
+    BlockManager,
     HedgedRouter,
     ReplicaSet,
     Scheduler,
@@ -230,6 +234,200 @@ def test_slot_pool_reset_restores_spec_init():
         want = 1.0 if spec.init == "ones" else 0.0
         assert np.all(arr[0] == want), f"slot 0 of {spec} not reset to {want}"
         assert np.all(arr[1] == 7.0), "reset must not touch other slots"
+
+
+# ---------------------------------------------------------------------------
+# Paged KV: block-table engine must be invisible too
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize(
+    "arch", ["smollm-135m", "deepseek-v3", "xlstm-125m", "zamba2"]
+)
+def test_paged_engine_matches_offline(arch):
+    """The byte-identity contract under paging, for all four cache
+    disciplines (GQA KV, MLA latent, pure recurrent, hybrid): chunked
+    prefill, slot reuse, AND arena pressure (10 blocks < the 18 a full
+    pool would reserve, so admissions queue on block budget) must leave
+    every request's greedy tokens identical to contiguous offline
+    decode."""
+    model, params = _model(arch)
+    reqs = _workload(model.cfg.vocab_size, n=5)
+    eng = ServeEngine(
+        model, params, n_slots=3, max_len=48,
+        scheduler=Scheduler(3, prefill_chunk=8, decode_per_prefill=2),
+        block_size=8, arena_blocks=10,
+    )
+    rids = [eng.submit(p, min(m, 24), arrival=a) for p, m, a in reqs]
+    results = eng.run()
+    for rid, (p, m, _) in zip(rids, reqs):
+        ref = generate_offline(model, params, p, min(m, 24), 48)
+        assert results[rid].tokens == ref, f"{arch} rid={rid} diverged (paged)"
+    if eng.pool.manager is not None:
+        eng.pool.manager.check()
+        assert eng.pool.manager.n_free_blocks == eng.pool.manager.num_blocks
+
+
+def test_paged_engine_defrag_mid_flight():
+    """Defrag under paging permutes host block tables only (device
+    gather happens just for contiguous leaves — none here) and must keep
+    token equivalence."""
+    model, params = _model("smollm-135m")
+    reqs = _workload(model.cfg.vocab_size, n=5, seed=9)
+    eng = ServeEngine(model, params, n_slots=3, max_len=MAX_LEN, block_size=16)
+    rids = [eng.submit(p, m, arrival=a) for p, m, a in reqs]
+    defragged = 0
+    while eng.step() != "done":
+        act = eng.pool.active
+        if act.any() and not act[: eng.pool.n_active].all():
+            if eng.defrag():
+                defragged += 1
+            eng.pool.manager.check()
+    assert defragged > 0, "workload never fragmented the pool; weak test"
+    for rid, (p, m, _) in zip(rids, reqs):
+        assert eng._requests[rid].tokens == generate_offline(
+            model, params, p, m, MAX_LEN
+        ), f"rid={rid} diverged after paged defrag"
+
+
+def test_paged_pool_defrag_is_device_noop_for_attention():
+    """Pure-attention pools have only paged leaves: defrag must not
+    touch (or copy) the arenas at all — block tables permute host-side."""
+    model, _ = _model("smollm-135m")
+    pool = SlotPool(model, n_slots=4, max_len=32, block_size=16)
+    assert all(is_paged_spec(s) for s in pool._spec_leaves)
+    for i in range(4):
+        assert pool.allocate(owner=i, n_tokens=20) is not None
+        pool.ensure_rows(i, 20)   # physically place the slot's 2 blocks
+    tables_before = pool.manager.tables.copy()
+    leaves_before = jax.tree.leaves(pool.caches)
+    pool.free(0)
+    pool.free(2)
+    moves = pool.defrag()
+    assert moves == {1: 0, 3: 1}
+    # Device arenas are the very same buffers (no gather ran).
+    for a, b in zip(jax.tree.leaves(pool.caches), leaves_before):
+        assert a is b
+    # Block tables moved with their slots.
+    assert (pool.manager.tables[0] == tables_before[1]).all()
+    assert (pool.manager.tables[1] == tables_before[3]).all()
+    pool.manager.check()
+
+
+def test_paged_pool_commit_append_free_lifecycle():
+    model, _ = _model("smollm-135m")
+    pool = SlotPool(model, n_slots=2, max_len=32, block_size=8, arena_blocks=6)
+    mgr = pool.manager
+    s0 = pool.allocate(owner=0, n_tokens=17)     # commits 3 blocks, owns 0
+    assert mgr.n_committed_blocks == 3 and mgr.n_used_blocks == 0
+    pool.ensure_rows(s0, 9)                      # rows -> physical blocks
+    assert mgr.n_used_blocks == 2
+    pool.ensure_rows(s0, 9)                      # idempotent
+    assert mgr.n_used_blocks == 2
+    # Admission is bounded by COMMITTED budgets, not physical blocks.
+    assert pool.can_admit(24) and not pool.can_admit(25)
+    assert pool.allocate(owner=1, n_tokens=25) is None
+    # Growing past the committed budget is a programming error.
+    with pytest.raises(ValueError, match="budget"):
+        pool.ensure_rows(s0, 25)
+    pool.free(s0)
+    assert mgr.n_free_blocks == 6 and mgr.n_committed_blocks == 0
+    assert pool.can_admit(32)                    # full slot now fits
+    assert mgr.used_high_water == 2              # live-token high-water
+    mgr.check()
+
+
+def test_paged_engine_rejects_oversized_request():
+    model, params = _model("smollm-135m")
+    eng = ServeEngine(model, params, n_slots=2, max_len=48,
+                      block_size=8, arena_blocks=4)
+    with pytest.raises(ValueError, match="arena"):
+        eng.submit(np.arange(30, dtype=np.int32), 10)   # 5 blocks > 4
+
+
+# ---------------------------------------------------------------------------
+# BlockManager invariants
+# ---------------------------------------------------------------------------
+
+def test_block_manager_invariants():
+    mgr = BlockManager(n_slots=3, n_rows=64, block_size=16, num_blocks=8)
+    assert mgr.table_width == 4
+    mgr.commit(0, 33)                  # budget 3 blocks
+    mgr.commit(1, 64)                  # budget 4 blocks
+    mgr.check()
+    assert mgr.n_committed_blocks == 7 and mgr.n_used_blocks == 0
+    mgr.append(0, 17)                  # 2 physical blocks
+    mgr.append(1, 64)                  # 4 physical blocks
+    assert mgr.n_used_blocks == 6 and mgr.used_high_water == 6
+    mgr.append(0, 30)                  # still 2 blocks: no growth
+    assert mgr.n_used_blocks == 6
+    mgr.append(0, 33)                  # grows to 3 (its full budget)
+    assert mgr.n_used_blocks == 7
+    mgr.check()
+    # Commitment and capacity bounds.
+    assert not mgr.can_commit(17)      # 2 more blocks > 8 - 7 committed
+    assert mgr.can_commit(16)
+    with pytest.raises(ValueError, match="over-committed"):
+        mgr.commit(2, 33)
+    with pytest.raises(ValueError, match="table width"):
+        mgr.commit(2, 65)              # > slot capacity regardless of free
+    with pytest.raises(ValueError, match="budget"):
+        mgr.append(0, 49)              # past its own commitment
+    # Free returns blocks AND budget instantly; tables go back to NULL.
+    mgr.free(1)
+    assert mgr.n_free_blocks == 5 and mgr.n_committed_blocks == 3
+    assert (mgr.tables[1] == 0).all()
+    mgr.check()
+    mgr.free(0)
+    assert mgr.n_free_blocks == 8
+    assert mgr.used_high_water == 7    # high-water survives frees
+    mgr.check()
+
+
+def test_block_manager_never_hands_out_a_block_twice():
+    mgr = BlockManager(n_slots=4, n_rows=32, block_size=8, num_blocks=12)
+    rng = np.random.default_rng(0)
+    budget = [0] * 4
+    for _ in range(300):
+        slot = int(rng.integers(4))
+        p = rng.random()
+        if budget[slot] and p < 0.3:
+            mgr.free(slot)
+            budget[slot] = 0
+        elif budget[slot]:
+            mgr.append(slot, int(rng.integers(1, budget[slot] + 1)))
+        else:
+            want = int(rng.integers(1, 33))
+            if mgr.can_commit(want):
+                mgr.commit(slot, want)
+                budget[slot] = want
+        mgr.check()   # asserts disjoint ownership + free-list integrity
+
+
+def test_block_size_must_divide_rows():
+    model, _ = _model("smollm-135m")
+    with pytest.raises(ValueError, match="divide"):
+        SlotPool(model, n_slots=2, max_len=32, block_size=24)
+
+
+# ---------------------------------------------------------------------------
+# Model lifetime: pool/engine jit caches must not pin dropped models
+# ---------------------------------------------------------------------------
+
+def test_dropped_model_pool_ops_collectable():
+    """Regression: ``_pool_ops``/``_engine_steps`` used to live in a
+    module-level lru_cache keyed on the model, pinning every model ever
+    served (and its jit traces) for the process lifetime. The memo now
+    lives on the model instance, so dropping the model frees it."""
+    cfg = get_config("smollm-135m").reduced()
+    model = build_model(cfg)
+    pool = SlotPool(model, n_slots=2, max_len=16)
+    assert any(k.startswith("_memo_") for k in model.__dict__), (
+        "pool ops memo should live on the model instance"
+    )
+    ref = weakref.ref(model)
+    del pool, model
+    gc.collect()
+    assert ref() is None, "dropped model is still pinned by the ops cache"
 
 
 # ---------------------------------------------------------------------------
