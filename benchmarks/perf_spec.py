@@ -1,0 +1,213 @@
+"""Speculative vs plain continuous-batching decode (`BENCH_spec.json`).
+
+Drives two ``repro.serve.ServeEngine`` instances over an identical
+saturated mixed-length workload — one plain, one with a draft model
+attached (DESIGN.md §12) — plus a fixed-gamma sweep, and writes
+``BENCH_spec.json``:
+
+  * **tokens/s (event clock)**: the headline. The draft is priced at
+    ``CostModel.draft_ratio`` (default 0.3) of the target per action and
+    the verify call at one decode tick plus a per-token term, so the
+    gain is exactly what the deterministic cost model admits: fewer,
+    wider actions win whenever acceptance clears the overhead. The
+    adaptive controller's row should match or beat the best fixed gamma.
+  * **accepted-prefix histogram**: how often lane-rounds (one entry per
+    speculating slot per round) banked 0..gamma draft tokens — the
+    k-outcome distribution the gamma pricing integrates over.
+  * **byte identity**: speculative greedy tokens must equal the plain
+    engine's exactly (which tests/test_serve.py pins to offline decode).
+
+The draft here is the target architecture with small parameter noise —
+a stand-in with a tunable agreement rate (the interesting operating
+point for acceptance telemetry), priced at the configured cost ratio.
+Where speculation LOSES (draft/target ratio near 1, or low acceptance),
+the adaptive row degrades gracefully to ~the plain engine (gamma -> 0)
+while the fixed-gamma rows pay full price — see the EXPERIMENTS.md
+caveat.
+
+    PYTHONPATH=src python -m benchmarks.perf_spec [--full] [--out PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import time
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serve import Scheduler, ServeEngine, SpecController
+
+DEFAULT_OUT = "BENCH_spec.json"
+
+ARCH = "smollm"
+N_SLOTS = 4
+MAX_LEN = 128
+RATE = 200.0          # saturated arrivals: every slot stays busy
+GAMMA_MAX = 6
+DRAFT_NOISE = 3e-4    # draft = target params + noise at this scale
+SEED = 11
+
+
+def make_workload(
+    n_requests: int, vocab: int, seed: int = SEED
+) -> List[Tuple[np.ndarray, int, float]]:
+    """Decode-heavy requests (prompt 4-23, generation 32-63): the regime
+    where speculation matters — decode ticks dominate, prefill is a
+    small constant on both sides."""
+    rng = np.random.default_rng(seed)
+    reqs, t = [], 0.0
+    for _ in range(n_requests):
+        p_len = int(rng.integers(4, 24))
+        n_new = int(rng.integers(32, 64))
+        t += float(rng.exponential(1.0 / RATE))
+        prompt = rng.integers(0, vocab, size=p_len).astype(np.int32)
+        reqs.append((prompt, n_new, t))
+    return reqs
+
+
+def perturb(params, scale: float, seed: int = 7):
+    import jax
+
+    leaves, treedef = jax.tree.flatten(params)
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(leaves))
+    return jax.tree.unflatten(
+        treedef,
+        [l + scale * jax.random.normal(k, l.shape, l.dtype)
+         for l, k in zip(leaves, keys)],
+    )
+
+
+def run_engine(model, params, reqs, *, draft=None, controller=None):
+    eng = ServeEngine(
+        model, params, n_slots=N_SLOTS, max_len=MAX_LEN,
+        scheduler=Scheduler(N_SLOTS, prefill_chunk=16, decode_per_prefill=2),
+        draft_model=None if draft is None else draft[0],
+        draft_params=None if draft is None else draft[1],
+        gamma_max=GAMMA_MAX, spec_controller=controller,
+    )
+    for prompt, m, arr in reqs:
+        eng.submit(prompt, m, arrival=arr)
+    t0 = time.perf_counter()
+    results = eng.run()
+    wall = time.perf_counter() - t0
+    s = eng.stats
+    point = {
+        "tokens_per_vsec": round(s.tokens_per_vsec, 2),
+        "tokens_per_wsec": round(s.generated_tokens / max(wall, 1e-9), 2),
+        "generated_tokens": s.generated_tokens,
+        "spec_rounds": s.spec_rounds,
+        "draft_ticks": s.draft_ticks,
+        "accepted_draft_tokens": s.spec_accepted,
+    }
+    if eng.spec is not None:
+        point["accept_hist"] = eng.spec.hist.tolist()
+        point["p_ewma"] = round(float(eng.spec.p), 4)
+    return point, {rid: r.tokens for rid, r in results.items()}
+
+
+class _FixedGamma(SpecController):
+    """Ablation: pin gamma (skip the adaptive pricing)."""
+
+    def __init__(self, gamma: int):
+        super().__init__(gamma_max=max(gamma, 1))
+        self._fixed = gamma
+
+    def choose_gamma(self, cost):
+        plan = super().choose_gamma(cost)  # keeps telemetry/probe clocks
+        from repro.serve.speculative import GammaPlan, expected_round_tokens
+        toks = expected_round_tokens(self._fixed, self.p_effective)
+        c = self.round_cost(self._fixed, cost)
+        return GammaPlan(self._fixed, toks, c, c / toks)
+
+
+def run(fast: bool = True, out: Optional[str] = None) -> dict:
+    import jax
+
+    cfg = get_config(ARCH).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    draft_model = build_model(cfg)
+    draft_params = perturb(params, DRAFT_NOISE)
+    n_requests = 16 if fast else 48
+    reqs = make_workload(n_requests, cfg.vocab_size)
+
+    # Warm both jit families so wall numbers are steady-state.
+    for kw in ({}, {"draft": (draft_model, draft_params)}):
+        warm, _ = run_engine(model, params,
+                             [(np.arange(5, dtype=np.int32), 8, 0.0)], **kw)
+
+    plain, plain_tokens = run_engine(model, params, reqs)
+    gammas = [2, 4, GAMMA_MAX] if fast else [1, 2, 3, 4, 5, GAMMA_MAX]
+    sweep = {}
+    for g in gammas:
+        sweep[g], toks = run_engine(
+            model, params, reqs,
+            draft=(draft_model, draft_params), controller=_FixedGamma(g),
+        )
+        sweep[g]["byte_identical"] = toks == plain_tokens
+    adaptive, adaptive_tokens = run_engine(
+        model, params, reqs, draft=(draft_model, draft_params),
+    )
+    adaptive["byte_identical"] = adaptive_tokens == plain_tokens
+
+    ratio = adaptive["tokens_per_vsec"] / max(plain["tokens_per_vsec"], 1e-12)
+    payload = {
+        "benchmark": "perf_spec",
+        "mode": "fast" if fast else "full",
+        "arch": cfg.name,
+        "n_slots": N_SLOTS,
+        "max_len": MAX_LEN,
+        "requests": n_requests,
+        "arrival_rate_per_vsec": RATE,
+        "gamma_max": GAMMA_MAX,
+        "draft_cost_ratio": Scheduler(1).clock.cost.draft_ratio,
+        "draft_noise": DRAFT_NOISE,
+        "machine": platform.machine(),
+        "python": platform.python_version(),
+        "plain": plain,
+        "fixed_gamma": {str(g): v for g, v in sweep.items()},
+        "adaptive": adaptive,
+        "tokens_per_vsec_ratio": round(ratio, 4),
+        "tokens_byte_identical": bool(
+            adaptive["byte_identical"]
+            and all(v["byte_identical"] for v in sweep.values())
+        ),
+    }
+
+    print(f"{'engine':14s} {'tok/vs':>9s} {'tok/ws':>9s} {'rounds':>7s} "
+          f"{'accepted':>9s} {'identical':>10s}")
+    print(f"{'plain':14s} {plain['tokens_per_vsec']:9.1f} "
+          f"{plain['tokens_per_wsec']:9.1f} {'-':>7s} {'-':>9s} {'ref':>10s}")
+    for g, v in sweep.items():
+        print(f"{f'gamma={g}':14s} {v['tokens_per_vsec']:9.1f} "
+              f"{v['tokens_per_wsec']:9.1f} {v['spec_rounds']:7d} "
+              f"{v['accepted_draft_tokens']:9d} {str(v['byte_identical']):>10s}")
+    v = adaptive
+    print(f"{'adaptive':14s} {v['tokens_per_vsec']:9.1f} "
+          f"{v['tokens_per_wsec']:9.1f} {v['spec_rounds']:7d} "
+          f"{v['accepted_draft_tokens']:9d} {str(v['byte_identical']):>10s}")
+    print(f"adaptive tok/vs ratio {ratio:.3f}x  accept hist "
+          f"{adaptive.get('accept_hist')}")
+
+    if out is not None:
+        with open(out, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {out}")
+    return payload
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="more requests")
+    ap.add_argument("--out", type=str, default=DEFAULT_OUT, metavar="PATH")
+    args = ap.parse_args()
+    run(fast=not args.full, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -55,7 +55,7 @@ def main() -> None:
     fast = not args.full
 
     from . import fig1_3_theory, fig4_simulation, fig5to7_general_model
-    from . import fig8to9_costs, perf_paged, perf_serve, perf_sim
+    from . import fig8to9_costs, perf_paged, perf_serve, perf_sim, perf_spec
     from . import roofline_report
 
     benches = {
@@ -66,6 +66,7 @@ def main() -> None:
         "perf_sim": perf_sim.run,
         "perf_serve": perf_serve.run,
         "perf_paged": perf_paged.run,
+        "perf_spec": perf_spec.run,
         "roofline_report": roofline_report.run,
     }
     if args.only:

@@ -38,6 +38,16 @@ def main():
                          "are byte-identical to the contiguous pool")
     ap.add_argument("--block-size", type=int, default=16,
                     help="paged mode: cache rows per block")
+    ap.add_argument("--speculative", action="store_true",
+                    help="attach a draft model for draft-then-verify "
+                         "decoding (DESIGN.md §12); greedy tokens are "
+                         "byte-identical, throughput is the only change")
+    ap.add_argument("--draft", type=str, default=None, metavar="CFG",
+                    help="draft arch (default: the target arch with "
+                         "freshly initialized params — a deliberately "
+                         "weak draft; watch the controller back off)")
+    ap.add_argument("--gamma-max", type=int, default=4,
+                    help="speculation: max draft tokens per round")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
@@ -45,11 +55,21 @@ def main():
     rng = jax.random.PRNGKey(0)
     params = model.init(rng)
 
+    draft_model = draft_params = None
+    if args.speculative:
+        draft_cfg = get_config(args.draft).reduced() if args.draft else cfg
+        if draft_cfg.vocab_size != cfg.vocab_size:
+            raise SystemExit("--draft must share the target's vocabulary")
+        draft_model = build_model(draft_cfg)
+        draft_params = draft_model.init(jax.random.PRNGKey(1))
+
     max_len = args.prompt_len + args.tokens + 1
     engine = ServeEngine(
         model, params, n_slots=args.slots, max_len=max_len,
         scheduler=Scheduler(args.slots, prefill_chunk=args.prefill_chunk),
         block_size=args.block_size if args.paged else None,
+        draft_model=draft_model, draft_params=draft_params,
+        gamma_max=args.gamma_max,
     )
 
     host_rng = np.random.default_rng(0)
@@ -74,6 +94,11 @@ def main():
               f"{engine.pool.kv_bytes_contiguous()} B contiguous)")
     print(f"prefill: {s.prefill_calls} calls / {s.prefill_tokens} tokens; "
           f"decode: {s.decode_ticks} ticks")
+    if engine.speculative:
+        print(f"speculation: {s.spec_rounds} rounds, {s.draft_ticks} draft "
+              f"ticks, {s.spec_accepted} draft tokens accepted "
+              f"(p_ewma={engine.spec.p:.3f}, accept hist "
+              f"{engine.spec.hist.tolist()})")
     print(f"generated {s.generated_tokens} tokens in {wall:.2f}s wall "
           f"({s.generated_tokens / max(wall, 1e-9):.1f} tok/s on CPU) — "
           f"{s.tokens_per_vsec:.1f} tok/s virtual")

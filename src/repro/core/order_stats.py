@@ -20,6 +20,16 @@ paper is priced against.
   with the closed-form hypoexponential CDF F, using Gauss-Legendre
   quadrature. The quadruple sum is kept (``thm5_quadruple_sum``) and used
   as a cross-check for small n in the tests. See DESIGN.md §8.5.
+
+Public API contract: everything here is pure math over the two delay
+models in ``repro.core.delay_models`` — no model/runtime state, no
+randomness, safe to call from any scheduler at decision frequency.
+Every consumer prices decisions with the same two functions:
+``expected_kth`` (training controller, ``serve.router.HedgedRouter``
+fan-outs, ``serve.speculative`` hedged gamma pricing) and
+``expected_kth_derivative`` (beta* line search). ``thm5_quadruple_sum``
+is a validation reference only — do not ship it into schedules (it is
+numerically unusable past n ~ 20, by design of the comparison).
 """
 
 from __future__ import annotations
@@ -34,6 +44,15 @@ from .delay_models import GeneralizedDelayModel, SimplifiedDelayModel
 
 DelayModel = Union[SimplifiedDelayModel, GeneralizedDelayModel]
 
+
+def _is_simplified(model: DelayModel) -> bool:
+    """Structural dispatch: Def. 2 adds the communication rate
+    ``lambda_x``; Def. 1 has none. (Not ``isinstance`` — the module can
+    be imported under two package names, e.g. pytest --doctest-modules
+    with the src/ namespace layout, and class identity would not
+    survive.)"""
+    return not hasattr(model, "lambda_x")
+
 __all__ = [
     "harmonic_tail",
     "expected_kth",
@@ -44,17 +63,41 @@ __all__ = [
 
 @lru_cache(maxsize=4096)
 def harmonic_tail(n: int, k: int) -> float:
-    """H(n, k) = sum_{j=n-k+1}^{n} 1/j — grows with k, shrinks with n."""
+    """H(n, k) = sum_{j=n-k+1}^{n} 1/j — grows with k, shrinks with n.
+
+    >>> harmonic_tail(4, 1)
+    0.25
+    >>> round(harmonic_tail(3, 3), 6)       # full wait: H_3
+    1.833333
+    >>> harmonic_tail(8, 2) < harmonic_tail(4, 2)   # more workers help
+    True
+    """
     if not (1 <= k <= n):
         raise ValueError(f"need 1 <= k <= n, got k={k}, n={n}")
     return float(sum(1.0 / j for j in range(n - k + 1, n + 1)))
 
 
 def expected_kth(model: DelayModel, n: int, k: int, beta: float) -> float:
-    """E[Z_{(k:n)}] for per-worker load ``beta`` under either delay model."""
+    """E[Z_{(k:n)}] for per-worker load ``beta`` under either delay model.
+
+    Prop. 1 closed form for the simplified model (shift + scaled
+    harmonic tail):
+
+    >>> from repro.core.delay_models import SimplifiedDelayModel
+    >>> m = SimplifiedDelayModel(lambda_y=2.0, x=0.05)
+    >>> mu = expected_kth(m, 4, 1, 1.0)
+    >>> mu == m.shift + 0.5 * harmonic_tail(4, 1)
+    True
+
+    Halving the per-worker load beta halves the stochastic part:
+
+    >>> half = expected_kth(m, 4, 1, 0.5)
+    >>> round((half - m.shift) / (mu - m.shift), 6)
+    0.5
+    """
     if not (1 <= k <= n):
         raise ValueError(f"need 1 <= k <= n, got k={k}, n={n}")
-    if isinstance(model, SimplifiedDelayModel):
+    if _is_simplified(model):
         return (beta / model.lambda_y) * harmonic_tail(n, k) + model.shift
     return model.shift(beta) + _hypoexp_kth_mean(
         model.lambda_x, model.comp_rate(beta), n, k
@@ -65,7 +108,7 @@ def expected_kth_derivative(
     model: DelayModel, n: int, k: int, beta: float, *, eps: float = 1e-6
 ) -> float:
     """d mu_{k:n} / d beta. Closed form for Def. 1, central diff for Def. 2."""
-    if isinstance(model, SimplifiedDelayModel):
+    if _is_simplified(model):
         return harmonic_tail(n, k) / model.lambda_y
     lo = max(beta - eps, 1e-9)
     hi = min(beta + eps, 1.0)

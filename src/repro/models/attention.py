@@ -102,20 +102,50 @@ def cache_rows_update(
     start: jax.Array,
     *,
     block_table: Optional[jax.Array] = None,
+    n_valid: Optional[jax.Array] = None,
 ) -> jax.Array:
     """Bulk prefill write: ``new`` (B, P, ...) rows land at sequence
     positions ``start + [0, P)``. Contiguous caches take one dynamic
     slice update; paged arenas scatter every row through the block table
     (positions whose table entry is still NULL — pad-bucket overhang past
-    the reserved blocks — fall into the sink block)."""
+    the reserved blocks — fall into the sink block).
+
+    ``start`` may be per-row ``(B,)`` (speculative verify: every slot
+    sits at its own length), in which case the contiguous path switches
+    to a scatter whose out-of-bounds rows are DROPPED, never clamped —
+    an XLA-clamped write start would silently overwrite valid rows.
+    ``n_valid`` (B,) marks how many of the P rows are real per sequence;
+    rows past it are dropped (contiguous) or routed to the NULL sink
+    (paged), so one fixed-shape verify call can carry ragged per-slot
+    draft lengths as data."""
     new = new.astype(cache.dtype)
-    if block_table is None:
-        return jax.lax.dynamic_update_slice_in_dim(cache, new, start, axis=1)
     B, P = new.shape[:2]
+    start = jnp.asarray(start, jnp.int32)
+    if block_table is None:
+        if start.ndim == 0 and n_valid is None:
+            return jax.lax.dynamic_update_slice_in_dim(cache, new, start, axis=1)
+        pos = jnp.broadcast_to(start.reshape(-1, 1), (B, 1)) + jnp.arange(P)
+        if n_valid is not None:
+            # Out-of-range row index -> scatter-drop.
+            pos = jnp.where(jnp.arange(P)[None, :] < n_valid[:, None],
+                            pos, cache.shape[1])
+        b_idx = jnp.repeat(jnp.arange(B), P)
+        rows = new.reshape(B * P, *new.shape[2:])
+        return cache.at[b_idx, pos.reshape(-1)].set(rows, mode="drop")
     bs = cache.shape[1]
-    pos = start + jnp.arange(P)                       # (P,)
-    bid = block_table[:, pos // bs]                   # (B, P) gather
-    off = jnp.broadcast_to(pos % bs, (B, P))
+    if start.ndim == 0:
+        pos = start + jnp.arange(P)                   # (P,)
+        bid = block_table[:, pos // bs]               # (B, P) gather
+        off = jnp.broadcast_to(pos % bs, (B, P))
+    else:
+        pos = start[:, None] + jnp.arange(P)          # (B, P)
+        slot = jnp.clip(pos // bs, 0, block_table.shape[1] - 1)
+        bid = jnp.take_along_axis(block_table, slot, axis=1)
+        off = pos % bs
+    if n_valid is not None:
+        # Rows past each sequence's valid count land in the NULL sink.
+        bid = jnp.where(jnp.arange(P)[None, :] < n_valid[:, None],
+                        bid, NULL_BLOCK)
     rows = new.reshape(B * P, *new.shape[2:])
     return cache.at[bid.reshape(-1), off.reshape(-1)].set(rows)
 
@@ -176,7 +206,8 @@ def mea_attention(
     *,
     causal: bool,
     chunk: int,
-    q_offset: int = 0,     # absolute position of q[0] (prefill continuation)
+    q_offset: jax.Array = 0,  # absolute position of q[0]: scalar, or (B,)
+                              # per-row starts (speculative verify)
 ) -> jax.Array:
     """Online-softmax attention, scanned over KV chunks.
 
@@ -198,7 +229,8 @@ def mea_attention(
     kc = k.astype(jnp.float32).reshape(B, n_chunks, chunk, Hkv, D)
     vc = v.astype(jnp.float32).reshape(B, n_chunks, chunk, Hkv, Dv)
 
-    q_pos = q_offset + jnp.arange(Sq)
+    q_offset = jnp.asarray(q_offset, jnp.int32)
+    q_pos = q_offset[..., None] + jnp.arange(Sq)   # (Sq,) or (B, Sq)
 
     def body(carry, inputs):
         m, l, acc = carry
@@ -208,8 +240,10 @@ def mea_attention(
         kv_pos = j * chunk + jnp.arange(chunk)
         valid = kv_pos < Skv
         if causal:
-            valid = valid[None, :] & (q_pos[:, None] >= kv_pos[None, :])
-            s = jnp.where(valid[None, :, None, None, :], s, NEG_INF)
+            valid = valid & (q_pos[..., :, None] >= kv_pos)  # (…, Sq, chunk)
+            if valid.ndim == 2:
+                valid = valid[None]
+            s = jnp.where(valid[:, :, None, None, :], s, NEG_INF)
         else:
             s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
         m_new = jnp.maximum(m, s.max(axis=-1))
@@ -306,16 +340,21 @@ def gqa_prefill(
     cache: Dict,
     start_index: jax.Array,
     block_table: Optional[jax.Array] = None,
+    n_valid: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Dict]:
     """Cache-writing batched prefill: project the whole (B, S) chunk once,
     write its K/V rows at ``start_index``, and attend causally against the
     cache (rows past the chunk are masked by causality, rows before it are
     an earlier chunk's prefix — chunked-prefill continuation is free).
     Paged mode scatters the chunk's rows through the block table (bulk
-    block writes) and attends against the gathered view."""
+    block writes) and attends against the gathered view. ``start_index``
+    may be per-row (B,) with ``n_valid`` marking each row's real token
+    count (speculative verify; see ``cache_rows_update``)."""
     q, k, v = _project_qkv(params, x, cfg, positions)
-    ck = cache_rows_update(cache["k"], k, start_index, block_table=block_table)
-    cv = cache_rows_update(cache["v"], v, start_index, block_table=block_table)
+    ck = cache_rows_update(cache["k"], k, start_index,
+                           block_table=block_table, n_valid=n_valid)
+    cv = cache_rows_update(cache["v"], v, start_index,
+                           block_table=block_table, n_valid=n_valid)
     if block_table is not None:
         kv_k, kv_v = paged_kv_view(ck, block_table), paged_kv_view(cv, block_table)
     else:
@@ -489,6 +528,7 @@ def mla_prefill(
     cache: Dict,
     start_index: jax.Array,
     block_table: Optional[jax.Array] = None,
+    n_valid: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Dict]:
     """Cache-writing batched MLA prefill: write the latent stream for the
     whole chunk, then attend via the expanded path (see ``gqa_prefill``)."""
@@ -496,10 +536,12 @@ def mla_prefill(
     q_nope, q_rope, ckv, k_rope = _mla_qkv(params, x, cfg, positions)
     new_cache = {
         "ckv": cache_rows_update(
-            cache["ckv"], ckv, start_index, block_table=block_table
+            cache["ckv"], ckv, start_index,
+            block_table=block_table, n_valid=n_valid,
         ),
         "k_rope": cache_rows_update(
-            cache["k_rope"], k_rope[:, :, 0, :], start_index, block_table=block_table
+            cache["k_rope"], k_rope[:, :, 0, :], start_index,
+            block_table=block_table, n_valid=n_valid,
         ),
     }
     if block_table is not None:

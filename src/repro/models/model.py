@@ -105,6 +105,7 @@ def _block_prefill(
     cache: Dict,
     start_index: jax.Array,
     block_tables: Optional[jax.Array] = None,
+    n_valid: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Dict]:
     """Multi-token block forward that also writes the block's cache rows
     (the serving prefill; mirrors ``_block_decode`` with S > 1)."""
@@ -113,6 +114,7 @@ def _block_prefill(
         a, new_cache = attn.gqa_prefill(
             params["attn"], h, cfg, positions=positions,
             cache=cache, start_index=start_index, block_table=block_tables,
+            n_valid=n_valid,
         )
         if kind == "parallel":
             f = mlp_apply(params["ffn"], h, cfg.act, cfg.glu)
@@ -129,6 +131,7 @@ def _block_prefill(
         a, new_cache = attn.mla_prefill(
             params["attn"], h, cfg, positions=positions,
             cache=cache, start_index=start_index, block_table=block_tables,
+            n_valid=n_valid,
         )
         x = x + a
         h = norm_apply(params["mlp_norm"], x, cfg.norm)
@@ -403,30 +406,10 @@ class Model:
 
         if self.fused_prefill:
             positions = start_index + jnp.arange(P)
-            x = self.embed_inputs(params, inputs)
-            new_caches = []
-            h = x
-            for seg_params, seg_cache, seg in zip(
-                params["stack"], caches, self.segments
-            ):
-                if seg.count == 1:
-                    h, nc = _block_prefill(
-                        seg_params, h, cfg, seg.kind, positions=positions,
-                        cache=seg_cache, start_index=start_index,
-                        block_tables=block_tables,
-                    )
-                else:
-                    def scan_fn(carry, xs):
-                        layer, cache = xs
-                        h2, nc = _block_prefill(
-                            layer, carry, cfg, seg.kind, positions=positions,
-                            cache=cache, start_index=start_index,
-                            block_tables=block_tables,
-                        )
-                        return h2, nc
-                    h, nc = jax.lax.scan(scan_fn, h, (seg_params, seg_cache))
-                new_caches.append(nc)
-            h = norm_apply(params["final_norm"], h, cfg.norm)
+            h, new_caches = self._fused_prefill_stack(
+                params, inputs, caches, positions=positions,
+                start_index=start_index, block_tables=block_tables,
+            )
             last = jnp.clip(length - 1, 0, P - 1)
             h_last = jnp.take_along_axis(h, last[:, None, None], axis=1)
             return self.logits(params, h_last), new_caches
@@ -458,6 +441,131 @@ class Model:
             body, (caches, last0), (jnp.moveaxis(inputs, 1, 0), jnp.arange(P))
         )
         return last_logits, caches
+
+    def _fused_prefill_stack(
+        self,
+        params: Dict,
+        inputs: jax.Array,
+        caches,
+        *,
+        positions: jax.Array,
+        start_index: jax.Array,
+        block_tables: Optional[jax.Array] = None,
+        n_valid: Optional[jax.Array] = None,
+    ):
+        """Shared cache-writing stack walk of the fused (pure-attention)
+        path -> (final-norm hidden states (B, S, D), caches). The single
+        source of truth for ``prefill_with_cache`` AND
+        ``verify_with_cache`` — the byte-identity contract depends on
+        those two never diverging in how they traverse the stack."""
+        cfg = self.cfg
+        x = self.embed_inputs(params, inputs)
+        new_caches = []
+        h = x
+        for seg_params, seg_cache, seg in zip(
+            params["stack"], caches, self.segments
+        ):
+            if seg.count == 1:
+                h, nc = _block_prefill(
+                    seg_params, h, cfg, seg.kind, positions=positions,
+                    cache=seg_cache, start_index=start_index,
+                    block_tables=block_tables, n_valid=n_valid,
+                )
+            else:
+                def scan_fn(carry, xs):
+                    layer, cache = xs
+                    h2, nc = _block_prefill(
+                        layer, carry, cfg, seg.kind, positions=positions,
+                        cache=cache, start_index=start_index,
+                        block_tables=block_tables, n_valid=n_valid,
+                    )
+                    return h2, nc
+                h, nc = jax.lax.scan(scan_fn, h, (seg_params, seg_cache))
+            new_caches.append(nc)
+        return norm_apply(params["final_norm"], h, cfg.norm), new_caches
+
+    def verify_with_cache(
+        self,
+        params: Dict,
+        inputs: jax.Array,                     # (B, S) int32 draft windows
+        caches,
+        n_input: jax.Array,                    # (B,) valid inputs per row
+        start_indices: jax.Array,              # (B,) first write position
+        block_tables: Optional[jax.Array] = None,
+        greedy_commit: bool = True,
+    ):
+        """Batched multi-token verify for speculative decoding ->
+        (all-position logits (B, S, V), caches).
+
+        Row ``b`` scores ``inputs[b, :n_input[b]]`` — the pending token
+        followed by the draft proposals — starting at its own cache
+        position ``start_indices[b]``; rows past ``n_input`` are inert
+        pad (their logits are garbage the caller must ignore). Every slot
+        sits at its own length, so the per-row start/count enter as DATA
+        and one compile per S covers every round (the ``worker_mask``
+        discipline).
+
+        Cache commitment is family-specific but the CONTRACT is shared —
+        on return the caches are valid for a committed prefix of any
+        length ``a+1 <= n_input[b]`` the caller derives from the logits
+        by the exact-argmax acceptance rule:
+
+          * attention stacks (fused path): K/V rows are written for all
+            ``n_input`` inputs; rows past the accepted prefix are stale
+            but DEAD (every read masks by the caller-tracked position),
+            so rollback is a host-side position rewind — block-table or
+            contiguous alike.
+          * recurrent/hybrid stacks (scan path): state cannot rewind, so
+            the scan replays the acceptance rule ON DEVICE — step t
+            commits its state update only while the greedy chain is
+            unbroken (argmax(logits_{t-1}) == inputs[t]), which is
+            bit-identical to the host's decision because both argmax the
+            same logits. ``greedy_commit=False`` disables the chain and
+            commits all ``n_input`` tokens (draft-side replay sync).
+        """
+        cfg = self.cfg
+        B, S = inputs.shape
+        start = jnp.asarray(start_indices, jnp.int32)
+        n_input = jnp.asarray(n_input, jnp.int32)
+
+        if self.fused_prefill:
+            positions = start[:, None] + jnp.arange(S)   # (B, S) rope positions
+            h, new_caches = self._fused_prefill_stack(
+                params, inputs, caches, positions=positions,
+                start_index=start, block_tables=block_tables, n_valid=n_input,
+            )
+            return self.logits(params, h), new_caches
+
+        # Recurrent/hybrid: scan the decode step, gating state commits by
+        # the on-device greedy acceptance chain (see docstring).
+        specs = self.cache_specs(  # axes metadata only; sizes unused
+            B, 2, block_size=1 if block_tables is not None else None
+        )
+        nxt = jnp.concatenate(
+            [inputs[:, 1:], jnp.zeros((B, 1), inputs.dtype)], axis=1
+        )
+
+        def body(carry, xs):
+            caches_c, acc = carry
+            tok, nxt_tok, t = xs
+            logits, new_caches = self.decode_step(
+                params, tok[:, None], caches_c, start + t,
+                block_tables=block_tables,
+            )
+            commit = acc & (t < n_input)
+            caches_c = slot_mask_select(commit, new_caches, caches_c, specs)
+            if greedy_commit:
+                g = jnp.argmax(logits[:, -1, :], axis=-1).astype(inputs.dtype)
+                acc = acc & ((g == nxt_tok) | (t + 1 >= n_input))
+            return (caches_c, acc), logits[:, 0, :]
+
+        (caches, _), ys = jax.lax.scan(
+            body,
+            (caches, jnp.ones((B,), bool)),
+            (jnp.moveaxis(inputs, 1, 0), jnp.moveaxis(nxt, 1, 0),
+             jnp.arange(S)),
+        )
+        return jnp.moveaxis(ys, 0, 1), caches
 
     def decode_step(
         self,

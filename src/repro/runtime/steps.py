@@ -36,6 +36,8 @@ __all__ = [
     "make_slot_prefill_step",
     "make_decode_step",
     "make_slot_decode_step",
+    "make_slot_verify_step",
+    "make_slot_replay_step",
     "make_init_fn",
 ]
 
@@ -228,6 +230,47 @@ def make_slot_decode_step(model: Model) -> Callable:
         )
 
     return slot_decode_step
+
+
+def make_slot_verify_step(model: Model) -> Callable:
+    """Speculative verify over the whole slot pool: one fused multi-token
+    call scores every lane's draft window at its own position.
+
+    (params, tokens (B, S), caches, n_input (B,), positions (B,),
+    [block_tables]) -> (greedy tokens (B, S) int32, caches). Per-lane
+    draft lengths ride along as DATA (``n_input``; 0 = free lane, 1 =
+    plain decode, 1 + gamma = speculating) — one compile per window
+    width S covers every round. The caches come back committed per the
+    family-specific contract of ``Model.verify_with_cache``: the caller
+    applies the exact-argmax acceptance rule to the returned greedy
+    tokens and rewinds its per-slot positions to the accepted prefix."""
+
+    def slot_verify_step(params, tokens, caches, n_input, positions,
+                         block_tables=None):
+        logits, caches = model.verify_with_cache(
+            params, tokens, caches, n_input, positions,
+            block_tables=block_tables,
+        )
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), caches
+
+    return slot_verify_step
+
+
+def make_slot_replay_step(model: Model) -> Callable:
+    """Draft-side resync after a verify round: commit exactly ``n_input``
+    already-known tokens per lane into the caches (no acceptance chain —
+    the tokens ARE the committed stream). Same shapes as
+    ``make_slot_verify_step``; returns only the caches."""
+
+    def slot_replay_step(params, tokens, caches, n_input, positions,
+                         block_tables=None):
+        _, caches = model.verify_with_cache(
+            params, tokens, caches, n_input, positions,
+            block_tables=block_tables, greedy_commit=False,
+        )
+        return caches
+
+    return slot_replay_step
 
 
 def make_init_fn(model: Model, optimizer: Optimizer) -> Callable:

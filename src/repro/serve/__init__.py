@@ -1,5 +1,5 @@
 """repro.serve — continuous-batching inference with order-statistics
-hedged dispatch (DESIGN.md §10).
+hedged dispatch (DESIGN.md §10, end-to-end guide in docs/serving.md).
 
 The training side of this repo prices every scheduling decision with the
 expected k-th order statistic of worker response times; this package
@@ -7,15 +7,27 @@ applies the same machinery to a second workload: serving. A fixed-shape
 slot pool + masked decode tick give recompile-free continuous batching
 (engine/kv_pool/scheduler), the KV cache optionally pages into a global
 block arena with admit-by-budget admission so memory tracks live tokens
-(kv_pool.BlockManager, DESIGN.md §11), and a multi-replica router
-prices hedged dispatch with ``expected_kth`` against EWMA straggler
-telemetry (router).
+(kv_pool.BlockManager, DESIGN.md §11), a multi-replica router prices
+hedged dispatch with ``expected_kth`` against EWMA straggler telemetry
+(router), and a draft model over a twin slot pool turns decode ticks
+into draft-then-verify rounds with an adaptively priced draft length
+(speculative, DESIGN.md §12).
+
+Public API contract: modules split cleanly into SPEC-DRIVEN (engine,
+kv_pool, speculative — generic over any ``model.cache_specs`` tree; no
+per-architecture code) and MODEL-AGNOSTIC (scheduler, router — pure
+host logic that never touches arrays). Model-specific behavior enters
+only through the ``Model`` serving methods (``cache_specs``,
+``prefill_with_cache``, ``decode_step``, ``verify_with_cache``) and is
+pinned per registered family by tests/test_serve.py and
+tests/test_speculative.py's byte-identity suites.
 """
 
 from .engine import EngineStats, ServeEngine, generate_offline, run_static
 from .kv_pool import BlockManager, SlotPool
 from .router import DispatchOutcome, HedgedRouter, HedgePlan, ReplicaSet
 from .scheduler import CostModel, EventClock, Request, Scheduler, next_bucket
+from .speculative import DraftRunner, GammaPlan, SpecController, hedged_round_cost
 
 __all__ = [
     "ServeEngine",
@@ -33,4 +45,8 @@ __all__ = [
     "HedgePlan",
     "DispatchOutcome",
     "ReplicaSet",
+    "SpecController",
+    "GammaPlan",
+    "DraftRunner",
+    "hedged_round_cost",
 ]

@@ -26,6 +26,19 @@ pressure and re-enter as finishing requests return blocks), and KV
 memory tracks live tokens instead of ``n_slots * max_len`` stripes.
 Greedy tokens stay byte-identical to the contiguous engine and to
 offline decode — paging is a layout change, not a math change.
+
+Speculative mode (``draft_model=...``): decode actions become
+draft-then-verify rounds (DESIGN.md §12, ``serve.speculative``) with
+the same byte-identity contract — speculation only moves throughput.
+
+Public API contract: the engine is SPEC-DRIVEN — it talks to caches
+only through ``SlotPool`` and the jitted steps built from
+``model.cache_specs``/``prefill_with_cache``/``decode_step``/
+``verify_with_cache``, so any registered arch family serves unchanged
+(attention KV, MLA latent, recurrent, hybrid). Model-specific behavior
+lives entirely behind those Model methods; the one family-visible
+distinction (fused vs scan verify commit) is documented on
+``Model.verify_with_cache`` and tested per family.
 """
 
 from __future__ import annotations
@@ -39,10 +52,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.layers import ParamSpec, is_paged_spec, slot_mask_select
-from repro.runtime.steps import make_slot_decode_step, make_slot_prefill_step
+from repro.runtime.steps import (
+    make_slot_decode_step,
+    make_slot_prefill_step,
+    make_slot_verify_step,
+)
 
 from .kv_pool import SlotPool, model_scoped_cache
 from .scheduler import CostModel, EventClock, Request, Scheduler, next_bucket
+from .speculative import DraftRunner, SpecController
 
 __all__ = ["ServeEngine", "EngineStats", "generate_offline", "run_static"]
 
@@ -53,6 +71,9 @@ class EngineStats:
     decode_ticks: int = 0
     prefill_calls: int = 0
     prefill_tokens: int = 0
+    spec_rounds: int = 0          # speculation rounds (draft + verify)
+    draft_ticks: int = 0          # sequential draft decode ticks
+    spec_accepted: int = 0        # draft tokens the target accepted
     virtual_seconds: float = 0.0
     wall_seconds: float = 0.0
 
@@ -87,7 +108,13 @@ def _engine_steps(model, n_slots: int, max_len: int,
         # NULL sink block via their zeroed block tables.)
         return logits, slot_mask_select(mask, new_caches, caches, specs)
 
-    return jax.jit(prefill), jax.jit(decode_tick)
+    # Speculative verify (only traced when an engine actually has a
+    # draft model — jax.jit is lazy). Needs no extra masking: dead-lane
+    # writes are dropped/sunk by ``n_input`` and recurrent commits are
+    # gated on-device (Model.verify_with_cache).
+    verify = jax.jit(make_slot_verify_step(model))
+
+    return jax.jit(prefill), jax.jit(decode_tick), verify
 
 
 class ServeEngine:
@@ -102,10 +129,22 @@ class ServeEngine:
         prefill_bucket: int = 16,
         block_size: Optional[int] = None,
         arena_blocks: Optional[int] = None,
+        draft_model=None,
+        draft_params=None,
+        gamma_max: int = 4,
+        spec_controller: Optional[SpecController] = None,
     ):
         """``block_size`` turns on paged KV (see module docstring);
         ``arena_blocks`` caps the arena below full capacity to serve
-        under an explicit memory budget (admit-by-budget queuing)."""
+        under an explicit memory budget (admit-by-budget queuing).
+
+        ``draft_model``/``draft_params`` turn on speculative decoding
+        (DESIGN.md §12): decode actions become draft-then-verify rounds
+        whose draft length is adapted by ``spec_controller`` (default:
+        ``SpecController(gamma_max)``). Greedy output stays byte-identical
+        to the non-speculative engine and to offline decode — acceptance
+        is exact argmax match, so speculation is purely a throughput
+        bet."""
         if model.cfg.is_encoder:
             raise ValueError("serving needs a causal decoder architecture")
         self.model = model
@@ -130,10 +169,28 @@ class ServeEngine:
         self._blank1 = model.blank_caches(
             1, max_len, block_size=block_size, num_blocks=0
         )
-        self._prefill, self._decode = _engine_steps(
+        self._prefill, self._decode, self._verify = _engine_steps(
             model, n_slots, max_len, block_size,
             0 if self.pool.manager is None else self.pool.manager.num_blocks,
         )
+        # -- speculation (optional) ------------------------------------------
+        self.draft: Optional[DraftRunner] = None
+        self.spec: Optional[SpecController] = None
+        if draft_model is not None:
+            if draft_params is None:
+                raise ValueError("draft_model needs draft_params")
+            if draft_model.cfg.vocab_size != model.cfg.vocab_size:
+                raise ValueError(
+                    "draft and target models must share a vocabulary "
+                    f"({draft_model.cfg.vocab_size} != {model.cfg.vocab_size})"
+                )
+            self.draft = DraftRunner(draft_model, draft_params, n_slots, max_len)
+            self.spec = spec_controller or SpecController(gamma_max)
+            self.spec.draft_fused = draft_model.fused_prefill
+
+    @property
+    def speculative(self) -> bool:
+        return self.draft is not None
 
     # -- submission ----------------------------------------------------------
     def submit(
@@ -218,6 +275,13 @@ class ServeEngine:
             pool.tables_device(slot),
         )
         pool.write_slot(slot, slot_caches, position=start + n_tok)
+        if self.speculative:
+            # The draft cache must hold the same prefix (same bucketed
+            # chunk, so the draft reuses the target's compile shapes).
+            self.draft.prefill_chunk(
+                slot, jnp.asarray(chunk), n_tok, start, owner=req.rid
+            )
+            sched.on_draft_prefill(n_tok)
         done = start + n_tok >= req.prompt_len
         sched.on_prefill_chunk(req, n_tok, done)
         self.stats.prefill_calls += 1
@@ -226,11 +290,16 @@ class ServeEngine:
             tok = int(jnp.argmax(logits[0, -1]))
             self._emit(req, tok)
             if self._finished(req):     # max_new_tokens == 1
-                pool.free(slot)
+                self._free_slot(slot)
             else:
                 self._pending[slot] = tok
                 self._decoding[slot] = True
         self.events.append(("prefill", self.sched.clock.now, req.rid))
+
+    def _free_slot(self, slot: int) -> None:
+        self.pool.free(slot)
+        if self.speculative:
+            self.draft.pool.free(slot)
 
     def _do_decode(self) -> None:
         pool = self.pool
@@ -256,10 +325,120 @@ class ServeEngine:
             self._emit(req, int(next_tok[slot]))
             if self._finished(req):
                 self._decoding[slot] = False
-                pool.free(slot)
+                self._free_slot(slot)
             else:
                 self._pending[slot] = next_tok[slot]
         self.events.append(("decode", self.sched.clock.now, -1))
+
+    def _do_spec_round(self) -> None:
+        """One draft-then-verify round over the whole pool (replaces a
+        decode tick when a draft model is attached).
+
+        Per-lane draft budgets enter the fixed-shape verify call as DATA
+        (``n_input``: 0 = free/mid-prefill lane, 1 = plain decode — a
+        lane one token from its budget — 1 + gamma_b = speculating), so
+        one compile per window width covers every occupancy pattern.
+        Rollback is the position rewind described in DESIGN.md §12.2:
+        the verify call itself committed only what the acceptance rule
+        allows, block tables keep their (within-budget) blocks, and the
+        draft resyncs by replaying the committed tokens from its
+        snapshot."""
+        pool, sched, draft = self.pool, self.sched, self.draft
+        n_slots = pool.n_slots
+        decoding = self._decoding.copy()
+        slots = np.nonzero(decoding)[0]
+        plan = self.spec.choose_gamma(sched.clock.cost)
+        gamma = plan.gamma
+        if gamma == 0 or slots.size == 0:
+            # Plain decode tick — but the draft cache must still consume
+            # the tokens the target consumes, or it falls behind the
+            # committed stream and later rounds would draft from a stale
+            # prefix. One masked draft tick (proposal discarded) keeps
+            # the lockstep; lanes that finished were freed in both pools.
+            old_pending = self._pending.copy()
+            self._do_decode()
+            live = decoding & self._decoding
+            if live.any():
+                draft.decode_tick(old_pending, live)
+                sched.on_draft_decode()
+                self.stats.draft_ticks += 1
+            return
+        # Per-lane draft budget: never draft past a request's remaining
+        # token budget (the last emitted token needs no successor), which
+        # also keeps every verify write inside the committed block budget.
+        remaining = np.zeros(n_slots, np.int64)
+        for slot in slots:
+            req = self._requests[pool.owner[slot]]
+            remaining[slot] = req.max_new_tokens - len(req.tokens)
+        gamma_b = np.minimum(gamma, np.maximum(remaining - 1, 0))
+        S = gamma + 1
+        inputs = np.zeros((n_slots, S), np.int32)
+        inputs[:, 0] = self._pending
+        n_input = np.zeros(n_slots, np.int32)
+        n_input[slots] = 1 + gamma_b[slots]
+
+        # -- draft phase: gamma masked sequential ticks ----------------------
+        draft.snapshot()
+        tokens = self._pending.copy()
+        draft_ticks = 0
+        for j in range(gamma):
+            mask_j = decoding & (gamma_b > j)
+            if not mask_j.any():
+                break
+            proposed = draft.decode_tick(tokens, mask_j)
+            tokens = np.where(mask_j, proposed, tokens)
+            inputs[mask_j, j + 1] = proposed[mask_j]
+            draft_ticks += 1
+
+        # -- verify phase: one fused target call over the pool ---------------
+        starts = pool.positions.copy()
+        for slot in slots:
+            pool.ensure_rows(int(slot), int(starts[slot]) + int(n_input[slot]))
+        positions = jnp.asarray(np.clip(starts, 0, pool.max_len - 1))
+        greedy, pool.caches = self._verify(
+            self.params, jnp.asarray(inputs), pool.caches,
+            jnp.asarray(n_input), positions, pool.tables_device(),
+        )
+        greedy = np.asarray(greedy, np.int32)
+
+        # -- acceptance: exact argmax chain, then emit + rewind --------------
+        n_commit = np.zeros(n_slots, np.int32)
+        emitted_live: List[int] = []   # per-lane commits, still-decoding lanes
+        emitted_all: List[int] = []
+        for slot in slots:
+            slot = int(slot)
+            ni = int(n_input[slot])
+            a = 0
+            while a < ni - 1 and greedy[slot, a] == inputs[slot, a + 1]:
+                a += 1
+            self.spec.observe(a, ni - 1)
+            self.stats.spec_accepted += a
+            req = self._requests[pool.owner[slot]]
+            for i in range(a + 1):
+                self._emit(req, int(greedy[slot, i]))
+            pool.positions[slot] = int(starts[slot]) + a + 1
+            n_commit[slot] = a + 1
+            emitted_all.append(a + 1)
+            if self._finished(req):
+                self._decoding[slot] = False
+                self._free_slot(slot)
+                n_commit[slot] = 0      # freed draft lane: leave it alone
+            else:
+                self._pending[slot] = greedy[slot, a]
+                emitted_live.append(a + 1)
+
+        # -- draft resync: rollback to the committed stream ------------------
+        extra_ticks, replayed = draft.resync(inputs, n_commit)
+        draft_ticks += extra_ticks
+        # Debt credit = the WEAKEST live lane's progress: a low-acceptance
+        # lane must still see decode_per_prefill rounds' worth of tokens
+        # between prefill chunks (finished lanes need no guarantee; an
+        # all-finished round credits its full commit).
+        emitted = min(emitted_live) if emitted_live else max(emitted_all)
+        sched.on_spec_round(draft_ticks, S, emitted, replay=replayed)
+        self.stats.spec_rounds += 1
+        self.stats.draft_ticks += draft_ticks
+        self.events.append(("spec", sched.clock.now, -1))
 
     def _emit(self, req: Request, tok: int) -> None:
         if not req.tokens:
@@ -277,8 +456,16 @@ class ServeEngine:
     def defrag(self) -> Dict[int, int]:
         """Compact the pool's live slots and remap the engine's per-slot
         decode state to match — safe mid-flight (bare ``pool.defrag()``
-        would silently desync ``_pending``/``_decoding``)."""
+        would silently desync ``_pending``/``_decoding``). With a draft
+        attached, the draft pool compacts with the identical permutation
+        (its occupancy mirrors the target's by construction), keeping
+        the two pools in slot-index lockstep across the move."""
         moves = self.pool.defrag()
+        if self.speculative:
+            draft_moves = self.draft.pool.defrag()
+            assert draft_moves == moves, (
+                f"draft pool desync under defrag: {draft_moves} != {moves}"
+            )
         if moves:
             inv = {new: old for old, new in moves.items()}
             pending, decoding = self._pending, self._decoding
@@ -299,7 +486,10 @@ class ServeEngine:
         if kind == "prefill":
             self._do_prefill(req)
         elif kind == "decode":
-            self._do_decode()
+            if self.speculative:
+                self._do_spec_round()
+            else:
+                self._do_decode()
         elif kind == "idle":
             self.sched.on_idle()
             self.events.append(("idle", self.sched.clock.now, -1))

@@ -17,6 +17,14 @@ tokens instead of ``n_slots * max_len`` reserved stripes. Recurrent
 conv/SSM/xLSTM state leaves (no sequence axis) keep their contiguous
 per-slot layout behind the same API in either mode.
 
+Public API contract: everything here is SPEC-DRIVEN. The pool never
+inspects a model beyond ``cache_specs`` — each leaf's ``ParamSpec.axes``
+says where the slot axis lives ("act_batch"), whether the leaf pages
+("kv_blocks"), and what a reset writes (``init``). Adding an arch
+family requires no pool changes, only correct specs. The only
+model-specific knowledge in this file is the NULL-sink/alignment
+convention shared with ``repro.models.attention``.
+
 Invariants (tested in tests/test_serve.py):
   * a slot is in exactly one of {free, active};
   * ``positions[s]`` is the next cache write index of slot ``s``;

@@ -20,6 +20,15 @@ straggler from ``n``.
 ``ReplicaSet`` is the ground-truth simulator (hidden per-replica speed
 factors over a ``repro.core.delay_models`` base model); the router only
 ever sees observed response times.
+
+Public API contract: MODEL-AGNOSTIC — the router prices opaque
+request/response latencies and never sees tokens, caches, or arch
+families. Its two dependencies are the paper-math layer
+(``repro.core.order_stats.expected_kth`` over a
+``repro.core.delay_models`` model) and the training-side EWMA
+``StragglerTracker``; the same pricing seam is reused by
+``serve.speculative.SpecController.choose_hedged`` for speculative
+verify fan-outs.
 """
 
 from __future__ import annotations

@@ -13,7 +13,17 @@ iteration time: a long prompt is chopped into ``prefill_chunk``-token
 pieces, and between consecutive prefill actions at least
 ``decode_per_prefill`` decode ticks run whenever sequences are active —
 so a 32k-token admission can't stall every in-flight request's
-inter-token latency by more than one chunk's cost.
+inter-token latency by more than one chunk's cost. Speculation rounds
+pay that debt by the tokens they commit (``on_spec_round``), so
+multi-token verifies never starve admissions.
+
+Public API contract: pure host logic, MODEL-AGNOSTIC by construction —
+nothing here touches arrays or specs. The engine reports what ran
+(``on_prefill_chunk``/``on_decode_tick``/``on_spec_round``/...) and the
+scheduler prices it with ``CostModel`` and picks the next action; any
+engine honoring that callback protocol (including the static-batching
+baseline and tests driving the scheduler directly) gets deterministic,
+replayable virtual time.
 """
 
 from __future__ import annotations
@@ -62,17 +72,50 @@ class CostModel:
     """Virtual seconds per engine action. Defaults are shaped like a
     fixed-batch accelerator step: a per-launch constant plus a per-token
     term for prefill; decode ticks cost the same regardless of how many
-    slots are live (the whole pool is one fixed-shape jit call)."""
+    slots are live (the whole pool is one fixed-shape jit call).
+
+    Speculation pricing (DESIGN.md §12): ``draft_ratio`` is the
+    draft/target cost ratio (one draft action costs ``draft_ratio`` times
+    the target's), and a verify call scoring a window of S tokens per
+    lane costs one decode tick plus ``verify_per_token * S`` — it is one
+    fused fixed-shape call whose weight traffic matches a decode tick,
+    with a small per-token activation term. These two knobs are the
+    economy the adaptive gamma controller prices rounds against."""
 
     prefill_base: float = 1e-3
     prefill_per_token: float = 1e-4
     decode_tick: float = 1e-3
+    draft_ratio: float = 0.3
+    verify_per_token: float = 1e-4
 
     def prefill(self, n_tokens: int) -> float:
         return self.prefill_base + self.prefill_per_token * n_tokens
 
     def decode(self) -> float:
         return self.decode_tick
+
+    # -- speculation ---------------------------------------------------------
+    def draft_decode(self) -> float:
+        return self.draft_ratio * self.decode_tick
+
+    def draft_prefill(self, n_tokens: int) -> float:
+        return self.draft_ratio * self.prefill(n_tokens)
+
+    def verify(self, n_tokens: int) -> float:
+        """One batched verify call scoring ``n_tokens`` positions/lane."""
+        return self.decode_tick + self.verify_per_token * n_tokens
+
+    def spec_round(
+        self, draft_ticks: int, verify_tokens: int, replay: bool = False
+    ) -> float:
+        """One speculation round: sequential draft ticks (including any
+        resync tick), one target verify, and — for drafts with recurrent
+        state, which cannot rewind — a draft-scale replay scan over the
+        same window (``replay=True``)."""
+        c = draft_ticks * self.draft_decode() + self.verify(verify_tokens)
+        if replay:
+            c += self.draft_ratio * self.verify(verify_tokens)
+        return c
 
 
 class EventClock:
@@ -85,6 +128,14 @@ class EventClock:
 
     def advance_decode(self) -> None:
         self.now += self.cost.decode()
+
+    def advance_draft_prefill(self, n_tokens: int) -> None:
+        self.now += self.cost.draft_prefill(n_tokens)
+
+    def advance_spec_round(
+        self, draft_ticks: int, verify_tokens: int, replay: bool = False
+    ) -> None:
+        self.now += self.cost.spec_round(draft_ticks, verify_tokens, replay)
 
     def advance_to(self, t: float) -> None:
         self.now = max(self.now, t)
@@ -186,6 +237,35 @@ class Scheduler:
 
     def on_decode_tick(self) -> None:
         self.clock.advance_decode()
+
+    def on_draft_prefill(self, n_tokens: int) -> None:
+        """The draft model mirrors every admission prefill (its cache
+        must hold the same prefix); priced at the draft cost ratio."""
+        self.clock.advance_draft_prefill(n_tokens)
+
+    def on_draft_decode(self) -> None:
+        """One draft-lockstep tick during a non-speculating (gamma = 0)
+        round: the draft consumes what the target consumed."""
+        self.clock.now += self.clock.cost.draft_decode()
+
+    def on_spec_round(
+        self, draft_ticks: int, verify_tokens: int, emitted: int,
+        replay: bool = False,
+    ) -> None:
+        """One speculation round in place of a decode tick.
+
+        Debt accounting: the ``decode_per_prefill`` interleave owes the
+        in-flight requests decode PROGRESS between prefill chunks, not
+        literally ticks — a verify round is worth ``emitted`` ticks of
+        that obligation, where the engine reports its WEAKEST live
+        lane's committed tokens (so a zero-acceptance lane still sees
+        the full interleave guarantee, while all-accepting rounds don't
+        starve admissions by stretching the debt window into multi-token
+        rounds). ``next_action`` already paid 1 when it issued the
+        round's "decode" action; the remaining ``emitted - 1`` are paid
+        here."""
+        self.clock.advance_spec_round(draft_ticks, verify_tokens, replay)
+        self._decode_debt = max(0, self._decode_debt - max(emitted - 1, 0))
 
     def on_idle(self) -> None:
         nxt = self._next_arrival()

@@ -1,0 +1,391 @@
+"""Speculative decoding: adaptive draft length over the slot pool.
+
+Draft-then-verify decoding is the paper's (k, beta) decision wearing
+serving clothes. Each round, a cheap DRAFT model proposes ``gamma``
+tokens per live slot (gamma sequential draft ticks), and the TARGET
+model scores all of them in ONE fused verify call
+(``Model.verify_with_cache`` — the batched-prefill machinery with
+per-slot start positions). The exact-argmax acceptance rule commits the
+longest draft prefix the target agrees with, plus one corrected token —
+so the greedy token stream is byte-identical to non-speculative decode
+by construction, and speculation is purely a throughput bet:
+
+  * ``gamma`` is the **computation-load knob** (the paper's beta): extra
+    speculative work bought per round, wasted whenever the chain breaks;
+  * the accepted-prefix length is the **fastest-k outcome** (the paper's
+    k): how much of the purchased work the round actually banks.
+
+``SpecController`` adapts gamma from acceptance telemetry exactly the
+way the paper's controller adapts (k, beta) from straggler telemetry:
+an EWMA estimate (here: per-draft-token acceptance probability ``p``,
+the serving twin of the EWMA slowdowns in
+``repro.runtime.telemetry.StragglerTracker``) feeds a brute-force
+minimization of expected cost per committed token. When the verify call
+is dispatched over replicas, the latency term is priced with the SAME
+``expected_kth`` order-statistics formula the ``HedgedRouter`` uses —
+the verify window width scales the per-replica load beta, so choosing
+(gamma, n_h) jointly IS the paper's (k, beta) adaptation
+(``choose_hedged``, DESIGN.md §12.4).
+
+Public API contract: everything here is SPEC-DRIVEN — ``DraftRunner``
+works for any registered model family because it only talks to the
+cache through ``SlotPool``/``ParamSpec`` axes metadata (snapshot/restore
+targets exactly the leaves without a sequence axis, i.e. recurrent
+state that cannot rewind). Nothing is specific to a model architecture;
+the draft and target models may be different families as long as they
+share a vocabulary.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.order_stats import expected_kth, expected_kth_derivative
+from repro.models.layers import ParamSpec, slot_mask_select
+from repro.runtime.steps import make_slot_prefill_step, make_slot_replay_step
+
+from .kv_pool import SlotPool, model_scoped_cache
+from .scheduler import CostModel
+
+__all__ = ["GammaPlan", "SpecController", "DraftRunner", "hedged_round_cost"]
+
+
+# ---------------------------------------------------------------------------
+# Gamma pricing
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GammaPlan:
+    gamma: int                   # draft tokens per round (0 = don't speculate)
+    expected_tokens: float       # E[committed tokens per round]
+    expected_cost: float         # virtual seconds per round
+    cost_per_token: float        # what the brute force minimizes
+    n_h: int = 1                 # verify fan-out (hedged pricing only)
+
+
+def expected_round_tokens(gamma: int, p: float) -> float:
+    """E[tokens committed by one round] = sum_{i=0}^{gamma} p^i under the
+    geometric acceptance model (each draft token independently agrees
+    with the target's argmax with probability ``p``; the round commits
+    the unbroken prefix plus one corrected token)."""
+    return float(sum(p ** i for i in range(gamma + 1)))
+
+
+def hedged_round_cost(
+    delay_model,
+    n_h: int,
+    gamma: int,
+    *,
+    draft_time: float,
+    beta_unit: float,
+    quorum: int = 1,
+    cost_per_replica: float = 0.0,
+    slowdown: float = 1.0,
+) -> float:
+    """Expected latency of one round whose verify call is hedged over
+    ``n_h`` replicas — the explicit (k, beta) mapping:
+
+        cost = gamma * t_draft
+             + mu_{k:n_h}(beta_unit * (gamma + 1)) * slowdown
+             + c_replica * n_h
+
+    The verify window width (gamma + 1) multiplies the per-replica load
+    beta exactly as the paper's per-worker batch fraction does, and the
+    k-th fastest verify response is priced by the same ``expected_kth``
+    closed form / quadrature the training controller uses. Unlike the
+    paper's schedules, the scaled load may exceed 1 (a verify window
+    wider than the reference load); the delay models' domain is
+    beta <= 1, so past it the latency term extrapolates linearly from
+    beta = 1 via ``expected_kth_derivative`` — exact for Def. 1 (mu is
+    affine in beta), first-order for Def. 2 — so widening the window
+    always costs latency; clamping at 1 would let the brute force pick
+    ever larger gamma for free."""
+    beta = beta_unit * (gamma + 1)
+    k = min(quorum, n_h)
+    if beta <= 1.0:
+        lat = expected_kth(delay_model, n_h, k, beta)
+    else:
+        lat = expected_kth(delay_model, n_h, k, 1.0) + (
+            beta - 1.0
+        ) * expected_kth_derivative(delay_model, n_h, k, 1.0)
+    return gamma * draft_time + lat * slowdown + cost_per_replica * n_h
+
+
+class SpecController:
+    """Adapts the draft length from acceptance telemetry.
+
+    ``observe(accepted, offered)`` feeds per-token Bernoulli outcomes
+    into an EWMA acceptance probability (offered - accepted is at most
+    one failure: the chain stops at the first disagreement, so later
+    positions are censored — the same censoring discipline as the
+    router's cancelled hedges). ``choose_gamma`` brute-forces the gamma
+    minimizing expected virtual cost per committed token under the
+    engine's ``CostModel``; gamma = 0 means speculation currently loses
+    (e.g. draft/target cost ratio near 1) and the engine falls back to
+    plain decode ticks, probing with gamma = 1 every ``probe_every``
+    rounds so the controller can re-enter when acceptance recovers."""
+
+    def __init__(
+        self,
+        gamma_max: int = 4,
+        *,
+        alpha: float = 0.1,
+        p0: float = 0.8,
+        warmup: int = 4,
+        probe_every: int = 16,
+    ):
+        if gamma_max < 1:
+            raise ValueError("need gamma_max >= 1")
+        self.gamma_max = gamma_max
+        self.alpha = alpha
+        self.p0 = p0
+        self.warmup = warmup
+        self.probe_every = probe_every
+        self.p = p0                  # EWMA per-draft-token acceptance
+        self.observations = 0        # Bernoulli outcomes absorbed
+        self.rounds = 0              # choose_gamma calls (probe clock)
+        #: set by the engine at attach: fused-prefill drafts resync by
+        #: position rewind (+ one expected tick), others by replay scan.
+        self.draft_fused = True
+        #: accepted-prefix-length histogram: hist[a] = LANE-rounds (one
+        #: entry per speculating slot per round, so sums to ~occupancy x
+        #: rounds) that accepted exactly ``a`` draft tokens.
+        self.hist = np.zeros(gamma_max + 1, np.int64)
+
+    # -- telemetry -----------------------------------------------------------
+    def observe(self, accepted: int, offered: int) -> None:
+        if offered <= 0:
+            return
+        if not (0 <= accepted <= offered):
+            raise ValueError(f"accepted {accepted} outside [0, {offered}]")
+        self.hist[min(accepted, self.gamma_max)] += 1
+        # Chain semantics: `accepted` successes, then at most ONE observed
+        # failure; positions past the break are censored, not failures.
+        outcomes = [1.0] * accepted + ([0.0] if accepted < offered else [])
+        for x in outcomes:
+            self.p += self.alpha * (x - self.p)
+            self.observations += 1
+
+    @property
+    def p_effective(self) -> float:
+        """Acceptance estimate the pricing uses (prior until warmed)."""
+        return self.p if self.observations >= self.warmup else self.p0
+
+    # -- pricing -------------------------------------------------------------
+    def round_cost(self, gamma: int, cost: CostModel) -> float:
+        """Expected virtual cost of one round at draft length ``gamma``.
+        gamma = 0 is a plain decode tick plus the draft-lockstep tick (a
+        draft-attached engine still pays to keep the draft cache on the
+        committed stream — part of why a bad draft should be detached,
+        not just throttled; see EXPERIMENTS.md). Fused-prefill drafts
+        pay one EXTRA expected tick with probability p^gamma (the
+        all-accepted resync, ``DraftRunner.resync``) instead of the
+        replay scan."""
+        if gamma == 0:
+            return cost.decode() + cost.draft_decode()
+        if self.draft_fused:
+            p_all = self.p_effective ** gamma
+            return (cost.spec_round(gamma, gamma + 1)
+                    + p_all * cost.draft_decode())
+        return cost.spec_round(gamma, gamma + 1, replay=True)
+
+    def choose_gamma(self, cost: CostModel) -> GammaPlan:
+        """Brute-force argmin over gamma of cost-per-committed-token —
+        the serving analogue of the controller's (k, beta) grid step."""
+        self.rounds += 1
+        p = self.p_effective
+        best: Optional[GammaPlan] = None
+        for gamma in range(self.gamma_max + 1):
+            toks = expected_round_tokens(gamma, p)
+            c = self.round_cost(gamma, cost)
+            plan = GammaPlan(gamma, toks, c, c / toks)
+            if best is None or plan.cost_per_token < best.cost_per_token:
+                best = plan
+        if best.gamma == 0 and self.probe_every > 0 \
+                and self.rounds % self.probe_every == 0:
+            # Periodic probe: keep the acceptance estimate alive so the
+            # controller can re-enter speculation when conditions change.
+            toks = expected_round_tokens(1, p)
+            c = self.round_cost(1, cost)
+            return GammaPlan(1, toks, c, c / toks)
+        return best
+
+    def choose_hedged(
+        self,
+        delay_model,
+        *,
+        draft_time: float,
+        beta_unit: float,
+        n_max: int,
+        quorum: int = 1,
+        cost_per_replica: float = 0.0,
+        slowdown: float = 1.0,
+    ) -> GammaPlan:
+        """Joint (gamma, n_h) brute force with the verify latency priced
+        by ``expected_kth`` — see ``hedged_round_cost``. This is the
+        composition seam with ``HedgedRouter``: pass the router's delay
+        model and EWMA ``slowdown`` for the replica subset."""
+        p = self.p_effective
+        best: Optional[GammaPlan] = None
+        for gamma in range(self.gamma_max + 1):
+            toks = expected_round_tokens(gamma, p)
+            for n in range(quorum, n_max + 1):
+                c = hedged_round_cost(
+                    delay_model, n, gamma,
+                    draft_time=draft_time, beta_unit=beta_unit,
+                    quorum=quorum, cost_per_replica=cost_per_replica,
+                    slowdown=slowdown,
+                )
+                plan = GammaPlan(gamma, toks, c, c / toks, n_h=n)
+                if best is None or plan.cost_per_token < best.cost_per_token:
+                    best = plan
+        return best
+
+
+# ---------------------------------------------------------------------------
+# Draft runner: the draft model's twin slot pool
+# ---------------------------------------------------------------------------
+
+@model_scoped_cache
+def _draft_steps(model, n_slots: int, max_len: int):
+    """Jitted draft-side steps, cached on the draft model instance (same
+    lifetime discipline as ``engine._engine_steps``)."""
+    specs = model.cache_specs(n_slots, max_len)
+    prefill = make_slot_prefill_step(model)
+    replay = make_slot_replay_step(model)
+    decode = model.decode_step
+
+    def draft_tick(params, tokens, caches, positions, mask):
+        logits, new_caches = decode(params, tokens, caches, positions)
+        caches = slot_mask_select(mask, new_caches, caches, specs)
+        return jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32), caches
+
+    return jax.jit(prefill), jax.jit(draft_tick), jax.jit(replay)
+
+
+class DraftRunner:
+    """A second ``SlotPool`` (contiguous layout — draft caches are small)
+    kept in slot-index lockstep with the target engine's pool: same
+    admissions, same frees, same defrag permutation.
+
+    Rollback discipline (per cache-leaf kind, read off the spec tree):
+
+      * sequence-axis leaves (KV rows) rewind for free — stale rows past
+        the committed position are dead and get overwritten;
+      * recurrent state leaves (no sequence axis) cannot rewind, so the
+        runner snapshots them (an immutable-pytree reference — zero
+        copies) before drafting and, after the verify, restores the
+        snapshot and REPLAYS exactly the committed tokens through one
+        masked scan (``make_slot_replay_step``). The replay also repairs
+        the one KV row an all-accepted round leaves unwritten, so it
+        runs unconditionally for every family.
+    """
+
+    def __init__(self, model, params, n_slots: int, max_len: int):
+        if model.cfg.is_encoder:
+            raise ValueError("draft model must be a causal decoder")
+        self.model = model
+        self.params = params
+        self.pool = SlotPool(model, n_slots, max_len)
+        self._prefill, self._tick, self._replay = _draft_steps(
+            model, n_slots, max_len
+        )
+        self._blank1 = model.blank_caches(1, max_len)
+        self._snap = None            # caches pytree at snapshot time
+        self._snap_positions = None
+
+    # -- admission mirror ----------------------------------------------------
+    def prefill_chunk(
+        self, slot: int, chunk: jax.Array, n_tok: int, start: int,
+        owner: Optional[int] = None,
+    ) -> None:
+        """Mirror one target prefill chunk into the draft cache. ``chunk``
+        is the engine's already-bucketed (1, bucket) token array, so the
+        draft reuses the target's compile buckets."""
+        if start == 0:
+            got = self.pool.allocate(owner=owner)
+            assert got == slot, f"draft pool desync: slot {got} != {slot}"
+            slot_caches = self._blank1
+        else:
+            slot_caches = self.pool.read_slot(slot)
+        _, slot_caches = self._prefill(
+            self.params, chunk, slot_caches,
+            jnp.asarray([n_tok], jnp.int32), jnp.int32(start), None,
+        )
+        self.pool.write_slot(slot, slot_caches, position=start + n_tok)
+
+    # -- draft loop ----------------------------------------------------------
+    def snapshot(self) -> None:
+        """Mark the committed state before drafting (leaves are immutable
+        jax arrays: keeping the pytree reference IS the snapshot)."""
+        self._snap = self.pool.caches
+        self._snap_positions = self.pool.positions.copy()
+
+    def decode_tick(self, tokens: np.ndarray, mask: np.ndarray) -> np.ndarray:
+        """One masked draft decode tick over the pool -> greedy proposals
+        (n_slots,); advances the positions of masked-in lanes."""
+        positions = jnp.asarray(np.clip(self.pool.positions, 0,
+                                        self.pool.max_len - 1))
+        greedy, self.pool.caches = self._tick(
+            self.params, jnp.asarray(tokens[:, None]), self.pool.caches,
+            positions, jnp.asarray(mask),
+        )
+        self.pool.positions[mask] += 1
+        return np.asarray(greedy, np.int32)
+
+    # -- post-verify resync --------------------------------------------------
+    def resync(
+        self, inputs: np.ndarray, n_commit: np.ndarray
+    ) -> Tuple[int, bool]:
+        """Roll the draft back to the committed stream: exactly
+        ``n_commit[b]`` tokens of ``inputs[b]`` per lane (0 = lane
+        untouched). Returns ``(extra_ticks, replayed)`` for the event
+        clock.
+
+        Pure-attention drafts rewind for free: the drafting ticks already
+        wrote the K/V rows of every token they consumed, the committed
+        prefix is a subset of those rows, and stale rows past the rewound
+        position are dead. The one gap is an ALL-ACCEPTED lane — the
+        verify committed its last draft token, which the draft proposed
+        but never consumed — repaired by a single masked tick (proposal
+        discarded) instead of a full replay call.
+
+        Drafts with recurrent state leaves restore the snapshot and
+        replay the committed tokens through one masked scan."""
+        assert self._snap is not None, "resync without snapshot"
+        starts = self._snap_positions
+        live = n_commit > 0
+        extra_ticks, replayed = 0, False
+        if self.model.fused_prefill:
+            drafted = self.pool.positions - starts      # ticks consumed/lane
+            need = live & (n_commit > drafted)          # all-accepted lanes
+            if need.any():
+                # Feed the missing token at its (current) position.
+                toks = np.take_along_axis(
+                    inputs, np.maximum(n_commit - 1, 0)[:, None], axis=1
+                )[:, 0]
+                self.decode_tick(toks.astype(np.int32), need)
+                extra_ticks = 1
+            rewind = live & ~need
+            self.pool.positions[rewind] = starts[rewind] + n_commit[rewind]
+        else:
+            self.pool.caches = jax.tree.map(
+                lambda s, snap, cur: cur if "act_kv_seq" in s.axes else snap,
+                self.pool.specs, self._snap, self.pool.caches,
+                is_leaf=lambda x: isinstance(x, ParamSpec),
+            )
+            self.pool.caches = self._replay(
+                self.params, jnp.asarray(inputs), self.pool.caches,
+                jnp.asarray(n_commit, jnp.int32),
+                jnp.asarray(np.clip(starts, 0, self.pool.max_len - 1)),
+                None,
+            )
+            self.pool.positions[live] = starts[live] + n_commit[live]
+            replayed = True
+        self._snap = self._snap_positions = None
+        return extra_ticks, replayed

@@ -1,0 +1,326 @@
+"""Speculative decoding correctness: draft-then-verify must be invisible.
+
+The contract mirrors the rest of repro.serve: speculation is purely a
+throughput bet, so the greedy token stream of a draft-attached engine —
+joining mid-flight, rolling back rejected drafts, surviving defrag and
+arena pressure — must be byte-identical to a lone offline decode, for
+attention and recurrent cache disciplines, with a good draft, a useless
+draft, and a perfect draft. Plus: the verify step's family-specific
+commit semantics, the gamma controller's pricing (incl. the
+``expected_kth`` hedged composition), and the scheduler's verify-debt
+accounting (speculation must not starve admissions under arena
+pressure).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.delay_models import SimplifiedDelayModel
+from repro.core.order_stats import expected_kth
+from repro.models import build_model
+from repro.serve import (
+    CostModel,
+    Scheduler,
+    ServeEngine,
+    SpecController,
+    generate_offline,
+    hedged_round_cost,
+)
+from repro.serve.speculative import expected_round_tokens
+
+RNG = jax.random.PRNGKey(0)
+MAX_LEN = 64
+
+
+def _model(arch):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    return model, model.init(RNG)
+
+
+def _perturb(params, scale, seed=7):
+    leaves, treedef = jax.tree.flatten(params)
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(leaves))
+    return jax.tree.unflatten(
+        treedef,
+        [l + scale * jax.random.normal(k, l.shape, l.dtype)
+         for l, k in zip(leaves, keys)],
+    )
+
+
+def _workload(vocab, n=6, seed=0, min_new=1, max_new=12):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        p = int(rng.integers(3, 20))
+        m = int(rng.integers(min_new, max_new))
+        prompt = rng.integers(0, vocab, size=p).astype(np.int32)
+        reqs.append((prompt, m, i * 0.004))
+    return reqs
+
+
+def _assert_offline_identical(eng, model, params, rids, reqs, max_len=MAX_LEN):
+    results = dict(eng._requests)
+    for rid, (p, m, _) in zip(rids, reqs):
+        ref = generate_offline(model, params, p, m, max_len)
+        assert results[rid].tokens == ref, f"rid={rid} diverged"
+
+
+# ---------------------------------------------------------------------------
+# Byte-identity: speculative engine == offline decode
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["smollm-135m", "xlstm-125m"])
+@pytest.mark.parametrize("noise", [3e-4, 2e-2])  # useful draft / useless draft
+def test_speculative_matches_offline(arch, noise):
+    """Attention + recurrent targets, good and near-useless drafts: the
+    greedy stream must be byte-identical to offline decode either way —
+    draft quality may only move throughput."""
+    model, params = _model(arch)
+    reqs = _workload(model.cfg.vocab_size)
+    eng = ServeEngine(
+        model, params, n_slots=3, max_len=MAX_LEN,
+        scheduler=Scheduler(3, prefill_chunk=8, decode_per_prefill=2),
+        draft_model=build_model(model.cfg), draft_params=_perturb(params, noise),
+        gamma_max=4,
+    )
+    rids = [eng.submit(p, m, arrival=a) for p, m, a in reqs]
+    eng.run()
+    _assert_offline_identical(eng, model, params, rids, reqs)
+    assert eng.stats.spec_rounds > 0
+
+
+@pytest.mark.parametrize("arch", ["smollm-135m", "xlstm-125m"])
+def test_speculative_paged_matches_offline(arch):
+    """Paged target pool under arena pressure: verify writes must stay
+    inside committed block budgets (ragged draft lengths as data), and
+    rollback must be block-table-aware."""
+    model, params = _model(arch)
+    reqs = _workload(model.cfg.vocab_size, n=5)
+    eng = ServeEngine(
+        model, params, n_slots=3, max_len=48,
+        scheduler=Scheduler(3, prefill_chunk=8, decode_per_prefill=2),
+        block_size=8, arena_blocks=10,
+        draft_model=build_model(model.cfg), draft_params=_perturb(params, 3e-4),
+        gamma_max=4,
+    )
+    rids = [eng.submit(p, min(m, 24), arrival=a) for p, m, a in reqs]
+    eng.run()
+    results = dict(eng._requests)
+    for rid, (p, m, _) in zip(rids, reqs):
+        ref = generate_offline(model, params, p, min(m, 24), 48)
+        assert results[rid].tokens == ref, f"rid={rid} diverged (paged spec)"
+    eng.pool.manager.check()
+    assert eng.pool.manager.n_free_blocks == eng.pool.manager.num_blocks
+
+
+def test_perfect_draft_accepts_everything():
+    """Draft == target: every offered draft token must be accepted (the
+    acceptance rule is exact argmax match on the same logits)."""
+    model, params = _model("smollm-135m")
+    reqs = _workload(model.cfg.vocab_size, n=4, seed=2, min_new=8, max_new=16)
+    eng = ServeEngine(
+        model, params, n_slots=2, max_len=MAX_LEN,
+        draft_model=build_model(model.cfg), draft_params=params, gamma_max=4,
+    )
+    rids = [eng.submit(p, m, arrival=a) for p, m, a in reqs]
+    eng.run()
+    _assert_offline_identical(eng, model, params, rids, reqs)
+    # Every observed round accepted its whole (possibly clamped) offer:
+    # the controller absorbed only successes, never a break.
+    assert eng.spec.hist.sum() > 0
+    assert eng.spec.p > eng.spec.p0   # only pulled up, never a failure
+    assert eng.spec.observations == eng.stats.spec_accepted > 0
+
+
+def test_recurrent_verify_commits_exactly_accepted_prefix():
+    """xLSTM state after a verify with a rejected tail must bit-match
+    sequentially decoding ONLY the accepted tokens (the on-device
+    acceptance chain) — state rollback correctness, not just tokens."""
+    model, params = _model("xlstm-125m")
+    rng = np.random.default_rng(3)
+    P = 8
+    prompt = rng.integers(0, model.cfg.vocab_size, size=P).astype(np.int32)
+    caches = model.blank_caches(1, MAX_LEN)
+    logits, caches = model.prefill_with_cache(
+        params, jnp.asarray(prompt[None]), caches,
+        length=jnp.asarray([P], jnp.int32),
+    )
+    t0 = int(jnp.argmax(logits[0, -1]))
+    # Sequential reference: decode 2 accepted tokens.
+    seq = caches
+    tok = t0
+    toks = [t0]
+    for t in range(P, P + 2):
+        lg, seq = model.decode_step(
+            params, jnp.asarray([[tok]], jnp.int32), seq, jnp.int32(t)
+        )
+        tok = int(jnp.argmax(lg[0, -1]))
+        toks.append(tok)
+    # Verify with drafts [right, wrong, anything]: accepts exactly 1.
+    wrong = (toks[2] + 1) % model.cfg.vocab_size
+    inputs = jnp.asarray([[t0, toks[1], wrong, 0]], jnp.int32)
+    _, committed = model.verify_with_cache(
+        params, inputs, caches, jnp.asarray([4], jnp.int32),
+        jnp.asarray([P], jnp.int32),
+    )
+    # Committed state must equal the sequential state after consuming
+    # exactly [t0, toks[1]] — the accepted prefix.
+    for a, b in zip(jax.tree.leaves(committed), jax.tree.leaves(seq)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# Rollback under defrag + slot reuse
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("block_size", [None, 16])
+def test_speculative_rollback_under_defrag(block_size):
+    """Defragging between rounds permutes both pools (and, paged, the
+    block tables holding rolled-back stale rows) — the stream must stay
+    byte-identical. Regression for rollback-state/defrag interaction."""
+    model, params = _model("smollm-135m")
+    reqs = _workload(model.cfg.vocab_size, n=5, seed=9)
+    eng = ServeEngine(
+        model, params, n_slots=3, max_len=MAX_LEN, block_size=block_size,
+        draft_model=build_model(model.cfg), draft_params=_perturb(params, 1e-3),
+        gamma_max=3,
+    )
+    rids = [eng.submit(p, m, arrival=a) for p, m, a in reqs]
+    defragged = 0
+    while eng.step() != "done":
+        act = eng.pool.active
+        if act.any() and not act[: eng.pool.n_active].all():
+            if eng.defrag():
+                defragged += 1
+            if eng.pool.manager is not None:
+                eng.pool.manager.check()
+    assert defragged > 0, "workload never fragmented the pool; weak test"
+    _assert_offline_identical(eng, model, params, rids, reqs)
+    assert eng.draft.pool.active.tolist() == eng.pool.active.tolist()
+
+
+def test_speculation_does_not_starve_admissions_under_pressure():
+    """Arena pressure + speculation: multi-token verify rounds pay down
+    the decode-per-prefill debt by their committed tokens, so queued
+    requests are still admitted while strangers generate, and blocks
+    freed by speculative finishes unblock the queue."""
+    model, params = _model("smollm-135m")
+    reqs = _workload(model.cfg.vocab_size, n=6, seed=4, min_new=6, max_new=14)
+    eng = ServeEngine(
+        model, params, n_slots=3, max_len=48,
+        scheduler=Scheduler(3, prefill_chunk=8, decode_per_prefill=4),
+        block_size=8, arena_blocks=9,   # < the 18 a full pool would commit
+        draft_model=build_model(model.cfg), draft_params=_perturb(params, 3e-4),
+        gamma_max=4,
+    )
+    rids = [eng.submit(p, min(m, 20), arrival=a) for p, m, a in reqs]
+    eng.run()
+    results = dict(eng._requests)
+    for rid, (p, m, _) in zip(rids, reqs):
+        ref = generate_offline(model, params, p, min(m, 20), 48)
+        assert results[rid].tokens == ref
+    # Admissions interleaved with speculation: some prefill happened
+    # after the first spec round (not all admissions up front).
+    kinds = [k for k, _, _ in eng.events]
+    first_spec = kinds.index("spec")
+    assert "prefill" in kinds[first_spec:], (
+        "no admission after speculation started — spec starved the queue"
+    )
+    assert eng.pool.manager.n_free_blocks == eng.pool.manager.num_blocks
+
+
+def test_spec_round_pays_decode_debt_by_committed_tokens():
+    """Scheduler unit: a verify round that commits k tokens counts as k
+    decode ticks toward the decode_per_prefill obligation."""
+    sched = Scheduler(2, decode_per_prefill=4)
+    sched._decode_debt = 4
+    sched.on_spec_round(draft_ticks=2, verify_tokens=3, emitted=3)
+    assert sched._decode_debt == 2          # 3 - the 1 next_action pays
+    sched.on_spec_round(draft_ticks=2, verify_tokens=3, emitted=1)
+    assert sched._decode_debt == 2          # single-token round: no extra
+    t = sched.clock.now
+    assert t == pytest.approx(
+        2 * sched.clock.cost.spec_round(2, 3)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Gamma controller
+# ---------------------------------------------------------------------------
+
+def test_choose_gamma_matches_bruteforce():
+    cost = CostModel()
+    ctrl = SpecController(gamma_max=6, warmup=0, p0=0.9)
+    plan = ctrl.choose_gamma(cost)
+    brute = min(
+        range(0, 7),
+        key=lambda g: ctrl.round_cost(g, cost) / expected_round_tokens(g, 0.9),
+    )
+    assert plan.gamma == brute > 0
+    assert plan.cost_per_token == pytest.approx(
+        ctrl.round_cost(plan.gamma, cost) / expected_round_tokens(plan.gamma, 0.9)
+    )
+
+
+def test_controller_backs_off_when_draft_costs_too_much():
+    """The EXPERIMENTS caveat as an assertion: draft/target cost ratio
+    near 1 makes every gamma > 0 lose, and the controller must fall back
+    to plain decode (gamma = 0) except for deterministic probes."""
+    expensive = CostModel(draft_ratio=0.95)
+    ctrl = SpecController(gamma_max=6, warmup=0, p0=0.3, probe_every=5)
+    ctrl.draft_fused = False   # recurrent draft: replay makes it worse
+    gammas = [ctrl.choose_gamma(expensive).gamma for _ in range(10)]
+    assert gammas.count(0) == 8
+    assert gammas[4] == gammas[9] == 1      # probes keep telemetry alive
+
+
+def test_controller_ewma_tracks_acceptance():
+    ctrl = SpecController(gamma_max=4, alpha=0.5, p0=0.5, warmup=2)
+    for _ in range(20):
+        ctrl.observe(4, 4)                  # all accepted
+    assert ctrl.p > 0.99
+    for _ in range(20):
+        ctrl.observe(0, 4)                  # chain breaks immediately
+    assert ctrl.p < 0.01
+    # Censoring: a break records ONE failure, not (offered - accepted).
+    ctrl2 = SpecController(gamma_max=4, alpha=0.5, p0=0.5)
+    ctrl2.observe(1, 4)
+    assert ctrl2.observations == 2          # 1 success + 1 failure
+    with pytest.raises(ValueError):
+        ctrl2.observe(5, 4)
+
+
+def test_hedged_gamma_pricing_uses_expected_kth():
+    """The (k, beta) mapping: hedged round cost must equal the paper's
+    order-statistics formula with beta scaled by the verify width, and
+    the joint brute force must find the argmin over (gamma, n_h)."""
+    dm = SimplifiedDelayModel(lambda_y=2.0, x=0.05)
+    kw = dict(draft_time=0.01, beta_unit=0.1, cost_per_replica=0.03)
+    got = hedged_round_cost(dm, 3, 4, **kw)
+    want = 4 * 0.01 + expected_kth(dm, 3, 1, 0.5) + 0.03 * 3
+    assert got == pytest.approx(want)
+
+    ctrl = SpecController(gamma_max=5, warmup=0, p0=0.85)
+    plan = ctrl.choose_hedged(dm, n_max=6, **kw)
+    brute = min(
+        ((g, n) for g in range(6) for n in range(1, 7)),
+        key=lambda gn: hedged_round_cost(dm, gn[1], gn[0], **kw)
+        / expected_round_tokens(gn[0], 0.85),
+    )
+    assert (plan.gamma, plan.n_h) == brute
+
+    # Load extrapolates past beta = 1 (no silent clamp, no domain
+    # crash): widening the verify window must keep costing latency for
+    # BOTH delay models — Def. 2 rejects beta > 1 outright, so the
+    # pricing extrapolates from beta = 1 via expected_kth_derivative.
+    from repro.core.delay_models import GeneralizedDelayModel
+
+    big = dict(kw, beta_unit=0.4)          # beta = 1.2, 1.6, 2.0
+    for model in (dm, GeneralizedDelayModel(lambda_x=5.0, lambda_y=2.0, x=0.02)):
+        lat = [hedged_round_cost(model, 2, g, **big) - g * big["draft_time"]
+               for g in (2, 3, 4)]
+        assert lat[0] < lat[1] < lat[2]

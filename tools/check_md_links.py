@@ -1,0 +1,92 @@
+#!/usr/bin/env python
+"""Offline markdown link check for the repo docs (CI `docs` job).
+
+Walks README.md, DESIGN.md, EXPERIMENTS.md, ROADMAP.md, PAPERS.md,
+CHANGES.md and docs/*.md, extracts inline links `[text](target)`, and
+verifies every non-http target resolves:
+
+  * relative file targets must exist on disk (relative to the file);
+  * `path#anchor` / `#anchor` targets must match a heading in the
+    target markdown file (GitHub-style slugs: lowercase, punctuation
+    stripped, spaces -> hyphens).
+
+External http(s) links are listed but not fetched (CI has no business
+depending on third-party uptime). Exits non-zero with a report of every
+broken link.
+
+    python tools/check_md_links.py [files...]
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+
+DEFAULT_FILES = [
+    "README.md", "DESIGN.md", "EXPERIMENTS.md", "ROADMAP.md",
+    "PAPERS.md", "CHANGES.md",
+]
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug, close enough for our headings: strip
+    markdown emphasis/code ticks, lowercase, drop everything but
+    alphanumerics/spaces/hyphens, spaces -> hyphens."""
+    h = re.sub(r"[`*_]", "", heading.strip())
+    h = h.lower()
+    h = re.sub(r"[^\w\- ]", "", h, flags=re.UNICODE)
+    return h.replace(" ", "-")
+
+
+def anchors_of(path: Path) -> set:
+    text = path.read_text(encoding="utf-8")
+    return {github_slug(m.group(1)) for m in HEADING_RE.finditer(text)}
+
+
+def check_file(path: Path, root: Path) -> list:
+    broken = []
+    text = path.read_text(encoding="utf-8")
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        line = text[: m.start()].count("\n") + 1
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        frag = None
+        if "#" in target:
+            target, frag = target.split("#", 1)
+        dest = path if not target else (path.parent / target).resolve()
+        if not dest.exists():
+            broken.append((path, line, m.group(1), "missing file"))
+            continue
+        if frag is not None and dest.suffix == ".md":
+            if github_slug(frag) not in anchors_of(dest):
+                broken.append((path, line, m.group(1), "missing anchor"))
+    return broken
+
+
+def main() -> int:
+    root = Path(__file__).resolve().parent.parent
+    files = [Path(a) for a in sys.argv[1:]]
+    if not files:
+        files = [root / f for f in DEFAULT_FILES]
+        files += sorted((root / "docs").glob("*.md"))
+    files = [f for f in files if f.exists()]
+    broken, checked = [], 0
+    for f in files:
+        checked += 1
+        broken += check_file(f, root)
+    if broken:
+        print(f"BROKEN LINKS ({len(broken)}):")
+        for path, line, target, why in broken:
+            print(f"  {path.relative_to(root)}:{line}: ({target}) — {why}")
+        return 1
+    print(f"ok: {checked} files, no broken internal links")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
