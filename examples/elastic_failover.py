@@ -1,12 +1,22 @@
-"""Fault-tolerance demo: worker failure, straggler demotion, resume.
+"""Chaos demo: workers slowing, dying, and REJOINING mid-run, with
+exact resume from an async checkpoint.
 
-1. Train with the adaptive controller; at step 60 worker 0 dies — its
-   gradient mask goes to zero permanently and the controller reprices all
-   order statistics with n-1 workers.
-2. A persistent straggler (worker 1, 6x slower) is demoted by the
-   telemetry EWMA tracker.
-3. Training checkpoints asynchronously; we then kill the loop and resume
-   from the latest checkpoint, verifying step/stage state round-trips.
+Timeline (one adaptive-(k, beta) run, n = 8 workers):
+
+  step 12 — worker 1 turns persistently slow (8x). The censoring-aware
+            telemetry never *observes* its times (it stops making the
+            fastest k); its time-on-test estimate grows from censor
+            levels alone until the demotion test fires -> n -= 1.
+  step 30 — worker 0 dies outright (fail event) -> n -= 1.
+  step 70 — worker 0 rejoins healthy: ``Controller.add_worker`` restores
+            n (and k_max up to its cap), telemetry history is reset so
+            stale slowness cannot re-demote it.
+
+Training checkpoints asynchronously throughout; we then rerun from the
+latest checkpoint and verify EXACT resume: the resumed history must be
+identical to the uninterrupted run's tail — same losses, same stages,
+same sim-time — because the checkpoint round-trips the full controller
+state, tracker state, fleet membership, and both RNG streams.
 
     PYTHONPATH=src python examples/elastic_failover.py
 """
@@ -20,10 +30,13 @@ from repro.core import DiagnosticConfig, SimplifiedDelayModel, StrategyConfig
 from repro.data import StagedBatcher, TokenStream
 from repro.models import build_model
 from repro.optim.optimizers import get_optimizer
-from repro.runtime.train_loop import TrainLoopConfig, train
+from repro.runtime.train_loop import FaultEvent, TrainLoopConfig, train
+
+TOTAL = 100
+CKPT_EVERY = 40  # async checkpoints at steps 40 and 80
 
 
-def main():
+def build():
     cfg = get_config("smollm-135m").reduced(
         n_layers=2, d_model=64, vocab_size=256, max_seq_len=64
     )
@@ -38,34 +51,63 @@ def main():
     delay = SimplifiedDelayModel(lambda_y=1.0, x=0.05)
     batcher = StagedBatcher(TokenStream(cfg.vocab_size), n_workers=n,
                             global_batch=32, seq_len=64)
+    return model, optimizer, strategy, delay, batcher
+
+
+def loop_cfg(ckdir):
+    return TrainLoopConfig(
+        total_steps=TOTAL, checkpoint_dir=ckdir, checkpoint_every=CKPT_EVERY,
+        log_every=25, demote_after_ewma=5.0,
+        events=[
+            FaultEvent(step=12, kind="slow", worker=1, factor=8.0),
+            FaultEvent(step=30, kind="fail", worker=0),
+            FaultEvent(step=70, kind="rejoin", worker=0),
+        ],
+    )
+
+
+def main():
+    model, optimizer, strategy, delay, batcher = build()
+    n = strategy.n
 
     with tempfile.TemporaryDirectory() as ckdir:
-        print("== phase 1: run 100 steps with failure injection at step 60 ==")
-        out = train(
-            model, optimizer, strategy, delay, batcher,
-            TrainLoopConfig(
-                total_steps=100, checkpoint_dir=ckdir, checkpoint_every=40,
-                log_every=25, fail_worker_at=60, fail_worker_id=0,
-                demote_after_ewma=5.0,
-            ),
-        )
-        ctrl = out["controller"]
-        print(f"workers remaining in controller: n={ctrl.cfg.n} (started {n})")
-        assert ctrl.cfg.n == n - 1, "failed worker must be removed"
+        print(f"== phase 1: {TOTAL} steps of chaos "
+              "(slow@12, fail@30, rejoin@70) ==")
+        out = train(model, optimizer, strategy, delay, batcher, loop_cfg(ckdir))
+        ctrl, hist = out["controller"], out["history"]
 
-        print("\n== phase 2: resume from the latest checkpoint ==")
-        out2 = train(
-            model, optimizer, strategy, delay, batcher,
-            TrainLoopConfig(
-                total_steps=130, checkpoint_dir=ckdir, checkpoint_every=40,
-                log_every=25,
-            ),
-        )
-        steps = [h["step"] for h in out2["history"]]
-        print(f"resumed at step {steps[0]} (checkpointed at 80), "
-              f"ran to {steps[-1]}")
-        assert steps[0] == 80, "must resume from the saved step"
-        print("\nfault-tolerance demo OK")
+        n_by_step = {h["step"]: h["n_workers"] for h in hist}
+        print(f"workers: start {n_by_step[0]}, after fail {n_by_step[35]}, "
+              f"after rejoin {n_by_step[75]}, final controller n={ctrl.cfg.n}")
+        assert n_by_step[0] == n
+        assert n_by_step[35] <= n - 1, "failed worker must be removed"
+        assert min(n_by_step.values()) <= n - 2, \
+            "persistent straggler must be demoted by telemetry"
+        assert n_by_step[75] == n_by_step[69] + 1, \
+            "rejoined worker must grow n by one"
+        assert not out["alive"][1], "the demoted straggler stays out"
+        assert out["alive"][0], "the rejoined worker is back"
+
+        print("\n== phase 2: exact resume from the step-80 checkpoint ==")
+        # Fresh model/optimizer/batcher objects: everything live must come
+        # back from the checkpoint, not from leftover Python state.
+        model2, optimizer2, strategy2, delay2, batcher2 = build()
+        out2 = train(model2, optimizer2, strategy2, delay2, batcher2,
+                     loop_cfg(ckdir))
+        steps2 = [h["step"] for h in out2["history"]]
+        assert steps2[0] == 80, "must resume from the saved step"
+
+        tail = [h for h in hist if h["step"] >= 80]
+        assert len(tail) == len(out2["history"])
+        for a, b in zip(tail, out2["history"]):
+            assert a == b, f"resume diverged at step {a['step']}:\n{a}\n{b}"
+        print(f"resumed at {steps2[0]}, ran to {steps2[-1]}; "
+              f"{len(tail)} resumed steps identical to the "
+              "uninterrupted run (loss, stage, sim-time, workers)")
+
+        assert out2["controller"].cfg.n == ctrl.cfg.n
+        np.testing.assert_array_equal(out2["alive"], out["alive"])
+        print("\nchaos + exact-resume demo OK")
 
 
 if __name__ == "__main__":

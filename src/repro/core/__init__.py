@@ -20,6 +20,7 @@ from .delay_models import (
     SimplifiedDelayModel,
     fit_generalized_mm,
     fit_simplified_mle,
+    fit_simplified_mle_censored,
 )
 from .diagnostics import DiagnosticConfig, DistanceDiagnostic, PflugDiagnostic
 from .error_model import SGDHyperParams, error_after, error_floor, time_to_error
@@ -33,6 +34,7 @@ __all__ = [
     "GeneralizedDelayModel",
     "SimplifiedDelayModel",
     "fit_simplified_mle",
+    "fit_simplified_mle_censored",
     "fit_generalized_mm",
     "expected_kth",
     "expected_kth_derivative",

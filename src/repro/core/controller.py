@@ -24,7 +24,7 @@ from typing import List, Optional, Sequence, Tuple
 import numpy as np
 
 from .beta_opt import beta_min_for, optimal_beta
-from .delay_models import fit_simplified_mle
+from .delay_models import fit_simplified_mle_censored
 from .diagnostics import DiagnosticConfig, make_diagnostic
 from .order_stats import DelayModel, expected_kth
 
@@ -186,7 +186,12 @@ class Controller:
         self._iter = 0
         self._rt_samples: list[float] = []
         self._rt_betas: list[float] = []
+        self._rt_censored: list[float] = []
         self._terminal = False
+        # k_max ceiling from the original config: remove_worker clamps
+        # k_max to the shrunken n, add_worker restores it up to this cap
+        # (None = "track n", the StrategyConfig default).
+        self._kmax_cap = cfg.k_max
 
     # -- telemetry ----------------------------------------------------------
     def observe(
@@ -196,25 +201,44 @@ class Controller:
         grad: Optional[np.ndarray] = None,
         loss: Optional[float] = None,
         response_times: Optional[np.ndarray] = None,
+        n_unobserved: int = 0,
     ) -> None:
+        """Feed one iteration of telemetry.
+
+        ``response_times`` must contain only times that were actually
+        observed. A fastest-k step observes the k smallest of n times and
+        passes ``n_unobserved = n - k``: those workers are censored at
+        the step's largest observed time (we only know they were slower),
+        and ``current_model`` fits them with the censored MLE instead of
+        pretending the k winners are an i.i.d. fleet sample.
+        """
         self._iter += 1
         if grad is not None or w is not None or loss is not None:
             self.diagnostic.observe(w=w, grad=grad, loss=loss)
         if response_times is not None:
             rt = np.asarray(response_times, dtype=np.float64).ravel()
-            self._rt_samples.extend(rt.tolist())
-            self._rt_betas.extend([self.stage.beta] * rt.size)
+            if n_unobserved < 0:
+                raise ValueError("n_unobserved must be >= 0")
+            if rt.size:
+                cens = np.zeros(rt.size)
+                cens[int(np.argmax(rt))] = float(n_unobserved)
+                self._rt_samples.extend(rt.tolist())
+                self._rt_betas.extend([self.stage.beta] * rt.size)
+                self._rt_censored.extend(cens.tolist())
             # Bound memory: keep the freshest 50k samples.
             if len(self._rt_samples) > 50_000:
                 self._rt_samples = self._rt_samples[-50_000:]
                 self._rt_betas = self._rt_betas[-50_000:]
+                self._rt_censored = self._rt_censored[-50_000:]
 
     def current_model(self) -> Optional[DelayModel]:
         if not self.estimate_model:
             return self.oracle_model
         if len(self._rt_samples) >= 64:
-            return fit_simplified_mle(
-                np.array(self._rt_samples), np.array(self._rt_betas)
+            return fit_simplified_mle_censored(
+                np.array(self._rt_samples),
+                np.array(self._rt_betas),
+                np.array(self._rt_censored),
             )
         return self.oracle_model
 
@@ -227,7 +251,14 @@ class Controller:
         return self.diagnostic.is_stationary()
 
     def advance(self) -> Optional[Stage]:
-        nxt = next_stage(self.cfg, self.stage, self.current_model())
+        try:
+            nxt = next_stage(self.cfg, self.stage, self.current_model())
+        except ValueError:
+            # The next stage needs a delay model to price beta* but none
+            # is available yet (live estimation, too little telemetry):
+            # stay in the current stage and keep collecting. The
+            # diagnostic stays stationary, so we retry next iteration.
+            return None
         if nxt is None:
             self._terminal = True
             return None
@@ -250,12 +281,75 @@ class Controller:
         return expected_kth(m, self.cfg.n, self.stage.k, self.stage.beta)
 
     # -- fault handling ------------------------------------------------------
+    def _kmax_for(self, n: int) -> int:
+        return n if self._kmax_cap is None else min(self._kmax_cap, n)
+
     def remove_worker(self) -> None:
         """A worker died: shrink n (order statistics reprice automatically)."""
         n_new = self.cfg.n - 1
         if n_new < 1:
             raise RuntimeError("all workers lost")
-        k_max = min(self.cfg.kmax, n_new)
-        self.cfg = dataclasses.replace(self.cfg, n=n_new, k_max=k_max)
+        self.cfg = dataclasses.replace(
+            self.cfg, n=n_new, k_max=self._kmax_for(n_new)
+        )
         if self.stage.k > n_new:
             self.stage = Stage(n_new, self.stage.beta)
+
+    def add_worker(self) -> None:
+        """A worker (re)joined: grow n and restore k_max up to the
+        original cap — the inverse of ``remove_worker``. The current
+        stage is left alone; the stage walk simply reprices against the
+        larger fleet (more workers make every mu_{k:n} cheaper)."""
+        n_new = self.cfg.n + 1
+        self.cfg = dataclasses.replace(
+            self.cfg, n=n_new, k_max=self._kmax_for(n_new)
+        )
+
+    # -- checkpoint round-trip ----------------------------------------------
+    def state_dict(self) -> dict:
+        """Full JSON-serializable control state for exact resume.
+
+        Restoring only ``Stage(k, beta)`` is not enough: a resumed
+        controller also needs the stage index, terminal flag, stage
+        history, diagnostic state, telemetry buffers, and the mutated
+        (n, k_max) from any worker removals — otherwise it re-walks
+        stages from a wrong index with a cold diagnostic and a fleet
+        size that no longer matches the loop's.
+        """
+        return {
+            "n": self.cfg.n,
+            "k_max": self.cfg.k_max,
+            "kmax_cap": self._kmax_cap,
+            "stage": [self.stage.k, self.stage.beta],
+            "stage_idx": self.stage_idx,
+            "terminal": self._terminal,
+            "iter": self._iter,
+            "stage_history": [
+                [it, s.k, s.beta] for it, s in self.stage_history
+            ],
+            "rt_samples": list(self._rt_samples),
+            "rt_betas": list(self._rt_betas),
+            "rt_censored": list(self._rt_censored),
+            "diagnostic": self.diagnostic.state_dict(),
+        }
+
+    def load_state_dict(self, d: dict) -> None:
+        self.cfg = dataclasses.replace(
+            self.cfg, n=int(d["n"]),
+            k_max=None if d["k_max"] is None else int(d["k_max"]),
+        )
+        self._kmax_cap = (
+            None if d["kmax_cap"] is None else int(d["kmax_cap"])
+        )
+        self.stage = Stage(int(d["stage"][0]), float(d["stage"][1]))
+        self.stage_idx = int(d["stage_idx"])
+        self._terminal = bool(d["terminal"])
+        self._iter = int(d["iter"])
+        self.stage_history = [
+            (int(it), Stage(int(k), float(b)))
+            for it, k, b in d["stage_history"]
+        ]
+        self._rt_samples = [float(v) for v in d["rt_samples"]]
+        self._rt_betas = [float(v) for v in d["rt_betas"]]
+        self._rt_censored = [float(v) for v in d["rt_censored"]]
+        self.diagnostic.load_state_dict(d["diagnostic"])

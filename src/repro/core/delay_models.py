@@ -30,6 +30,7 @@ __all__ = [
     "SimplifiedDelayModel",
     "GeneralizedDelayModel",
     "fit_simplified_mle",
+    "fit_simplified_mle_censored",
     "fit_generalized_mm",
 ]
 
@@ -171,6 +172,51 @@ def fit_simplified_mle(
         # Degenerate (all samples equal): fall back to a large rate.
         return SimplifiedDelayModel(lambda_y=1e9, x=shift_hat, y=0.0)
     lambda_hat = 1.0 / mean_excess
+    return SimplifiedDelayModel(lambda_y=lambda_hat, x=shift_hat, y=0.0)
+
+
+def fit_simplified_mle_censored(
+    samples: np.ndarray,
+    betas: np.ndarray,
+    censored: Optional[np.ndarray] = None,
+) -> SimplifiedDelayModel:
+    """Censoring-aware MLE of the simplified model (type-II censoring).
+
+    On real hardware a fastest-k step observes only the k smallest of n
+    response times; the n - k stragglers are *censored* at the step's
+    k-th order statistic (we only learn ``Z > z_(k)``). Fitting the
+    uncensored MLE to such telemetry is biased fast: the sample mean of
+    the k winners underestimates the fleet mean, so ``lambda_y`` comes
+    out too large and every ``expected_kth`` price is too optimistic.
+
+    ``censored[i]`` counts the workers censored at observation ``i``'s
+    value (the caller attaches ``n - k`` to each step's largest observed
+    time; 0 elsewhere). The rate MLE is the classic total-time-on-test
+    estimator (Epstein & Sobel): with normalized excesses
+    ``e_i = (z_i - shift) / beta_i ~ Exp(lambda_y)``,
+
+        lambda_hat = N_observed / sum_i (1 + censored_i) * e_i,
+
+    which is exactly the exponential MLE when nothing is censored
+    (``fit_simplified_mle``). The shift MLE is unchanged: censoring only
+    tells us ``Z > z_(k) >= min_i z_i``, so the likelihood still
+    increases in the shift up to the smallest *observed* sample.
+    """
+    if censored is None:
+        return fit_simplified_mle(samples, betas)
+    z = np.asarray(samples, dtype=np.float64)
+    b = np.broadcast_to(np.asarray(betas, dtype=np.float64), z.shape)
+    c = np.broadcast_to(np.asarray(censored, dtype=np.float64), z.shape)
+    if z.size < 2:
+        raise ValueError("need at least 2 samples")
+    if np.any(c < 0):
+        raise ValueError("censored counts must be >= 0")
+    shift_hat = float(z.min())
+    excess = (z - shift_hat) / b
+    total_time_on_test = float(((1.0 + c) * excess).sum())
+    if total_time_on_test <= 0:
+        return SimplifiedDelayModel(lambda_y=1e9, x=shift_hat, y=0.0)
+    lambda_hat = float(z.size) / total_time_on_test
     return SimplifiedDelayModel(lambda_y=lambda_hat, x=shift_hat, y=0.0)
 
 

@@ -57,6 +57,22 @@ class PflugDiagnostic:
     def is_stationary(self) -> bool:
         return self._count >= self.burn_in and self._stat < 0.0
 
+    # JSON-serializable state for checkpoint round-trip (exact resume).
+    def state_dict(self) -> dict:
+        return {
+            "prev_grad": (
+                None if self._prev_grad is None else self._prev_grad.tolist()
+            ),
+            "stat": self._stat,
+            "count": self._count,
+        }
+
+    def load_state_dict(self, d: dict) -> None:
+        pg = d["prev_grad"]
+        self._prev_grad = None if pg is None else np.asarray(pg, np.float64)
+        self._stat = float(d["stat"])
+        self._count = int(d["count"])
+
 
 class DistanceDiagnostic:
     """Log-log slope of ||w - w_anchor||^2 at geometric checkpoints."""
@@ -118,6 +134,28 @@ class DistanceDiagnostic:
     def is_stationary(self) -> bool:
         return self._stationary
 
+    def state_dict(self) -> dict:
+        return {
+            "anchor": None if self._anchor is None else self._anchor.tolist(),
+            "count": self._count,
+            "next_check": self._next_check,
+            "prev_check": (
+                None if self._prev_check is None else list(self._prev_check)
+            ),
+            "hits": self._hits,
+            "stationary": self._stationary,
+        }
+
+    def load_state_dict(self, d: dict) -> None:
+        a = d["anchor"]
+        self._anchor = None if a is None else np.asarray(a, np.float64)
+        self._count = int(d["count"])
+        self._next_check = int(d["next_check"])
+        pc = d["prev_check"]
+        self._prev_check = None if pc is None else (int(pc[0]), float(pc[1]))
+        self._hits = int(d["hits"])
+        self._stationary = bool(d["stationary"])
+
 
 class LossPlateauDiagnostic:
     """EWMA relative-improvement plateau test on the stochastic loss.
@@ -177,6 +215,22 @@ class LossPlateauDiagnostic:
 
     def is_stationary(self) -> bool:
         return self._stationary
+
+    def state_dict(self) -> dict:
+        return {
+            "fast": self._fast,
+            "slow": self._slow,
+            "count": self._count,
+            "hits": self._hits,
+            "stationary": self._stationary,
+        }
+
+    def load_state_dict(self, d: dict) -> None:
+        self._fast = None if d["fast"] is None else float(d["fast"])
+        self._slow = None if d["slow"] is None else float(d["slow"])
+        self._count = int(d["count"])
+        self._hits = int(d["hits"])
+        self._stationary = bool(d["stationary"])
 
 
 @dataclasses.dataclass(frozen=True)

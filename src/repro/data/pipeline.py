@@ -15,7 +15,7 @@ the batch SHAPE — the step cache compiles one program per stage shape.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional
+from typing import Dict, Optional
 
 import numpy as np
 
@@ -64,21 +64,36 @@ def make_frame_stream(d_model: int, seed: int = 0):
 @dataclasses.dataclass
 class StagedBatcher:
     stream: TokenStream
-    n_workers: int
+    n_workers: int           # fleet size at construction (beta=1 reference)
     global_batch: int        # at beta = 1
     seq_len: int
 
-    def batch_for_stage(self, beta: float) -> Dict[str, np.ndarray]:
+    def _per_worker(self, beta: float) -> int:
         b_w = self.global_batch // self.n_workers
-        per_worker = max(int(round(beta * b_w)), 1)
-        B = per_worker * self.n_workers
+        return max(int(round(beta * b_w)), 1)
+
+    def batch_for_stage(
+        self, beta: float, n_workers: Optional[int] = None
+    ) -> Dict[str, np.ndarray]:
+        """Worker-major batch for the stage's (beta, fleet size).
+
+        ``n_workers`` overrides the construction-time fleet size so an
+        elastic loop can keep the batch layout aligned with the
+        controller's CURRENT n after failures/rejoins: the per-worker
+        share stays the beta-scaled b_w (per-worker compute is the
+        paper's knob) and the batch shrinks/grows with the fleet,
+        keeping ``B % n == 0`` — the worker-major mask contract.
+        """
+        n = self.n_workers if n_workers is None else n_workers
+        if n < 1:
+            raise ValueError(f"need at least one worker, got {n}")
+        B = self._per_worker(beta) * n
         arr = self.stream.sequences(B, self.seq_len)
         return {
             "inputs": arr[:, :-1],
             "labels": arr[:, 1:],
         }
 
-    def batch_shape(self, beta: float):
-        b_w = self.global_batch // self.n_workers
-        per_worker = max(int(round(beta * b_w)), 1)
-        return (per_worker * self.n_workers, self.seq_len)
+    def batch_shape(self, beta: float, n_workers: Optional[int] = None):
+        n = self.n_workers if n_workers is None else n_workers
+        return (self._per_worker(beta) * n, self.seq_len)

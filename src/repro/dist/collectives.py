@@ -23,7 +23,12 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-__all__ = ["contributors", "example_weights", "masked_weighted_ce"]
+__all__ = [
+    "contributors",
+    "check_worker_major",
+    "example_weights",
+    "masked_weighted_ce",
+]
 
 
 def contributors(worker_mask: jax.Array) -> jax.Array:
@@ -31,19 +36,39 @@ def contributors(worker_mask: jax.Array) -> jax.Array:
     return jnp.sum(worker_mask.astype(jnp.float32))
 
 
+def check_worker_major(batch: int, n_workers: int) -> int:
+    """The mask-vs-batch layout contract. Returns rows per worker.
+
+    A fastest-k mask is a LENGTH-``n_workers`` vector over the workers
+    that produced THIS batch: the batch is worker-major (worker ``w``
+    owns rows ``[w * b_w, (w + 1) * b_w)``) and ``batch`` must divide
+    evenly into ``n_workers`` shares. Slicing a stale larger-fleet mask
+    down to the batch size — or comparing worker count against batch
+    rows — silently misassigns rows to the wrong workers after the
+    fleet shrinks; size the mask for the current fleet instead.
+    """
+    if n_workers < 1:
+        raise ValueError(f"need at least one worker, got {n_workers}")
+    if batch % n_workers != 0:
+        raise ValueError(
+            f"batch {batch} not divisible by n_workers {n_workers}; the "
+            "worker-major layout requires equal per-worker shares (is the "
+            "mask sized for the current fleet that produced this batch?)"
+        )
+    return batch // n_workers
+
+
 def example_weights(worker_mask: jax.Array, batch: int) -> jax.Array:
     """Expand a (n_workers,) 0/1 mask to per-example weights (batch,).
 
     The batch must be worker-major with equal per-worker shares: example
-    ``i`` belongs to worker ``i // (batch / n)``.
+    ``i`` belongs to worker ``i // (batch / n)`` (``check_worker_major``).
     """
-    n = worker_mask.shape[0]
-    if batch % n != 0:
+    if worker_mask.ndim != 1:
         raise ValueError(
-            f"batch {batch} not divisible by n_workers {n}; the worker-major "
-            "layout requires equal per-worker shares"
+            f"worker_mask must be 1-D over workers, got shape {worker_mask.shape}"
         )
-    per_worker = batch // n
+    per_worker = check_worker_major(batch, worker_mask.shape[0])
     return jnp.repeat(
         worker_mask.astype(jnp.float32), per_worker,
         total_repeat_length=batch,

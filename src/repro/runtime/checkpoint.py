@@ -41,6 +41,24 @@ def _flatten_with_paths(tree) -> Dict[str, np.ndarray]:
     return flat
 
 
+def _fsync_dir(path: Path) -> None:
+    """fsync a DIRECTORY: durably commit its entries (the renames).
+
+    File-content fsyncs alone do not make an os.rename durable — the
+    new directory entry lives in the parent directory's data, which has
+    its own fd to sync. No-op on platforms without directory fds.
+    """
+    flags = os.O_RDONLY | getattr(os, "O_DIRECTORY", 0)
+    try:
+        fd = os.open(path, flags)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
 class CheckpointManager:
     def __init__(self, root: str | Path, keep_last: int = 3):
         self.root = Path(root)
@@ -60,14 +78,17 @@ class CheckpointManager:
         np.savez(tmp / "arrays.npz", **arrays)
         meta = {"step": step, "time": time.time(), "extras": extras or {}}
         (tmp / "meta.json").write_text(json.dumps(meta))
-        # fsync the directory entries before the atomic rename.
+        # Durability order: file contents -> tmp dir entries -> atomic
+        # rename -> parent dir entry (the rename itself) -> LATEST.
         for f in tmp.iterdir():
             with open(f, "rb") as fh:
                 os.fsync(fh.fileno())
+        _fsync_dir(tmp)
         final = self.root / f"step_{step:09d}"
         if final.exists():
             shutil.rmtree(final)
         os.rename(tmp, final)
+        _fsync_dir(self.root)
         self._update_latest(final.name)
         self._prune()
         return final
@@ -141,8 +162,12 @@ class CheckpointManager:
     # -- internals ------------------------------------------------------------
     def _update_latest(self, name: str):
         ptr_tmp = self.root / ".LATEST_tmp"
-        ptr_tmp.write_text(name)
+        with open(ptr_tmp, "w") as fh:
+            fh.write(name)
+            fh.flush()
+            os.fsync(fh.fileno())
         os.rename(ptr_tmp, self.root / "LATEST")
+        _fsync_dir(self.root)  # the pointer flip must survive a crash too
 
     def _prune(self):
         steps = sorted(

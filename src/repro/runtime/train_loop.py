@@ -2,13 +2,25 @@
 
 Wires together:
   * ``Controller`` (adaptive-(k,beta) stages, stationarity diagnostics,
-    online delay-model estimation from telemetry),
+    online delay-model estimation from CENSORED telemetry),
   * per-stage compiled train steps (compile cache keyed by batch shape),
-  * masked fastest-k aggregation (worker mask from simulated/observed
-    response times),
-  * async checkpointing + exact resume,
+  * masked fastest-k aggregation (the worker mask is DATA — no recompile
+    across straggler subsets; per-stage beta batch shape is the only
+    recompile axis),
+  * async checkpointing + exact resume (full control state, telemetry,
+    and RNG streams round-trip, so a resumed run replays the exact
+    history the uninterrupted run would have produced),
   * fault handling: worker failure -> permanent mask + controller n-=1;
-    persistent straggler demotion via response-time EWMA.
+    persistent straggler demotion via censoring-aware telemetry; worker
+    REJOIN -> controller n+=1 (``Controller.add_worker``).
+
+Censoring discipline (DESIGN.md §2.5): a fastest-k step only ever
+observes the k response times it waited for. The controller receives
+exactly those k order statistics plus the count of censored workers, and
+fits the delay model with the censored MLE — feeding it the full
+uncensored sample (including times of workers the step never waited for)
+is physically impossible on real hardware and was the bug this loop
+used to have.
 
 On real hardware the response times come from per-host step telemetry;
 in this container they are sampled from the paper's delay models — the
@@ -17,17 +29,18 @@ control path is identical (DESIGN.md §2).
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
-import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.controller import Controller, StrategyConfig
+from repro.core.controller import Controller, Stage, StrategyConfig
 from repro.core.order_stats import DelayModel
 from repro.data.pipeline import StagedBatcher
+from repro.dist.collectives import check_worker_major
 from repro.dist.sharding import activation_sharding
 from repro.models.model import Model
 from repro.optim.optimizers import Optimizer
@@ -35,7 +48,29 @@ from repro.runtime.checkpoint import CheckpointManager
 from repro.runtime.steps import make_train_step
 from repro.runtime.telemetry import StragglerTracker
 
-__all__ = ["TrainLoopConfig", "train"]
+__all__ = ["FaultEvent", "TrainLoopConfig", "train"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """A scheduled chaos event: worker ``worker`` at step ``step``.
+
+    kind:
+      * ``"fail"``   — the worker dies (permanent unless it rejoins);
+      * ``"rejoin"`` — a previously removed worker comes back healthy
+        (controller n+=1, telemetry history reset, slowdown cleared);
+      * ``"slow"``   — the worker's response times are multiplied by
+        ``factor`` from this step on (1.0 = recovered).
+    """
+
+    step: int
+    kind: str
+    worker: int
+    factor: float = 1.0
+
+    def __post_init__(self):
+        if self.kind not in ("fail", "rejoin", "slow"):
+            raise ValueError(f"unknown fault kind {self.kind!r}")
 
 
 @dataclasses.dataclass
@@ -46,10 +81,22 @@ class TrainLoopConfig:
     checkpoint_dir: Optional[str] = None
     log_every: int = 10
     seed: int = 0
-    estimate_model: bool = True      # fit delay model from telemetry
-    fail_worker_at: Optional[int] = None   # inject a permanent failure
+    estimate_model: bool = True      # fit delay model from (censored) telemetry
+    oracle_to_controller: bool = True  # False: controller sees ONLY telemetry
+    fail_worker_at: Optional[int] = None   # legacy single-failure injection
     fail_worker_id: int = 0
     demote_after_ewma: Optional[float] = None  # straggler demotion threshold
+    events: Sequence[FaultEvent] = ()          # chaos schedule
+
+
+def _event_schedule(cfg: TrainLoopConfig) -> Dict[int, List[FaultEvent]]:
+    events = list(cfg.events)
+    if cfg.fail_worker_at is not None:
+        events.append(FaultEvent(cfg.fail_worker_at, "fail", cfg.fail_worker_id))
+    by_step: Dict[int, List[FaultEvent]] = {}
+    for ev in events:
+        by_step.setdefault(ev.step, []).append(ev)
+    return by_step
 
 
 def train(
@@ -65,10 +112,12 @@ def train(
     rng = np.random.default_rng(loop_cfg.seed)
     ctrl = Controller(
         strategy,
-        model=delay_model,
+        model=delay_model if loop_cfg.oracle_to_controller else None,
         estimate_model=loop_cfg.estimate_model,
     )
-    tracker = StragglerTracker(strategy.n)
+    n0 = strategy.n  # fleet size at loop start; worker ids are 0..n0-1
+    tracker = StragglerTracker(n0)
+    schedule = _event_schedule(loop_cfg)
 
     step_fn_cache: Dict[tuple, Callable] = {}
     base_step = make_train_step(model, optimizer)
@@ -86,62 +135,103 @@ def train(
         if loop_cfg.checkpoint_dir
         else None
     )
+    alive = np.ones(n0, bool)
+    slow_factor = np.ones(n0)
+    sim_time = 0.0
     start_step = 0
     if ckpt is not None:
         restored = ckpt.restore_latest({"params": params, "opt": opt_state})
         if restored is not None:
             start_step, state, extras = restored
             params, opt_state = state["params"], state["opt"]
-            if extras.get("stage"):
-                from repro.core.controller import Stage
-
+            if extras.get("controller"):
+                # Full control-state resume: controller (stage walk +
+                # diagnostic + telemetry), straggler tracker, fleet
+                # membership, the event clock, and both RNG streams.
+                ctrl.load_state_dict(extras["controller"])
+                tracker.load_state_dict(extras["tracker"])
+                alive = np.asarray(extras["alive"], bool)
+                slow_factor = np.asarray(extras["slow_factor"], np.float64)
+                sim_time = float(extras["sim_time"])
+                rng.bit_generator.state = extras["rng_state"]
+                batcher.stream.rng.bit_generator.state = extras["stream_rng_state"]
+            elif extras.get("stage"):
+                # Older checkpoints carried only the stage pair.
                 ctrl.stage = Stage(**extras["stage"])
 
-    alive = np.ones(strategy.n, bool)
     history: List[Dict[str, float]] = []
-    sim_time = 0.0
 
-    ctx = activation_sharding(mesh) if mesh is not None else _nullcontext()
+    ctx = activation_sharding(mesh) if mesh is not None else contextlib.nullcontext()
     with ctx:
         for step in range(start_step, loop_cfg.total_steps):
-            stage = ctrl.stage
-            # ---- failure injection -------------------------------------
-            if loop_cfg.fail_worker_at is not None and step == loop_cfg.fail_worker_at:
-                alive[loop_cfg.fail_worker_id] = False
-                ctrl.remove_worker()
+            # ---- chaos events -------------------------------------------
+            for ev in schedule.get(step, ()):
+                if ev.kind == "fail" and alive[ev.worker]:
+                    alive[ev.worker] = False
+                    ctrl.remove_worker()
+                elif ev.kind == "rejoin" and not alive[ev.worker]:
+                    alive[ev.worker] = True
+                    slow_factor[ev.worker] = ev.factor
+                    tracker.reset_worker(ev.worker)
+                    ctrl.add_worker()
+                elif ev.kind == "slow":
+                    slow_factor[ev.worker] = ev.factor
 
-            # ---- response times + fastest-k mask ------------------------
-            z = delay_model.sample(rng, strategy.n, stage.beta)
-            z = np.where(alive, z, np.inf)
-            k_eff = min(stage.k, int(alive.sum()))
-            order = np.argpartition(z, k_eff - 1)
-            mask = np.zeros(strategy.n, np.float32)
-            mask[order[:k_eff]] = 1.0
-            sim_time += float(z[order[:k_eff]].max())
-            tracker.observe(z, alive)
+            # ---- pending demotions from telemetry -----------------------
             if loop_cfg.demote_after_ewma is not None:
                 for w in tracker.persistent_stragglers(loop_cfg.demote_after_ewma):
                     if alive[w] and alive.sum() > 1:
                         alive[w] = False
                         ctrl.remove_worker()
 
-            # ---- batch for this stage's beta ----------------------------
-            np_batch = batcher.batch_for_stage(stage.beta)
+            # ---- the n-contract: controller and fleet must agree --------
+            n_active = int(alive.sum())
+            if n_active != ctrl.cfg.n:
+                raise RuntimeError(
+                    f"fleet/controller divergence: {n_active} alive workers "
+                    f"but controller prices n={ctrl.cfg.n}"
+                )
+            active_ids = np.nonzero(alive)[0]
+            stage = ctrl.stage
+
+            # ---- response times + fastest-k mask ------------------------
+            # Sample the FULL original fleet every step so the RNG stream
+            # consumption is independent of membership (exact resume and
+            # run-to-run comparability), then restrict to active workers.
+            z_full = delay_model.sample(rng, n0, stage.beta) * slow_factor
+            z_act = z_full[active_ids]
+            k_eff = min(stage.k, n_active)
+            order = np.argpartition(z_act, k_eff - 1)[:k_eff]
+            t_step = float(z_act[order].max())
+            sim_time += t_step
+            mask = np.zeros(n_active, np.float32)
+            mask[order] = 1.0
+
+            # ---- censored telemetry -------------------------------------
+            # Only the k waited-for times are observable on real hardware;
+            # everyone else is censored at the step time z_(k).
+            selected = np.zeros(n0, bool)
+            selected[active_ids[order]] = True
+            tracker.observe(z_full, alive, observed=selected, censor_level=t_step)
+
+            # ---- batch sized for the CURRENT fleet ----------------------
+            np_batch = batcher.batch_for_stage(stage.beta, n_workers=n_active)
+            check_worker_major(np_batch["inputs"].shape[0], n_active)
             batch = {
                 "inputs": jnp.asarray(np_batch["inputs"]),
                 "labels": jnp.asarray(np_batch["labels"]),
-                "worker_mask": jnp.asarray(
-                    mask[: np_batch["inputs"].shape[0]]
-                    if strategy.n > np_batch["inputs"].shape[0]
-                    else mask
-                ),
+                "worker_mask": jnp.asarray(mask),
                 "lr": jnp.float32(loop_cfg.lr),
             }
             fn = compiled_step(np_batch["inputs"].shape)
             params, opt_state, metrics = fn(params, opt_state, batch)
 
             loss = float(metrics["loss"])
-            ctrl.observe(loss=loss, response_times=z[np.isfinite(z)])
+            ctrl.observe(
+                loss=loss,
+                response_times=np.sort(z_act[order]),
+                n_unobserved=n_active - k_eff,
+            )
             switched = ctrl.maybe_advance()
 
             history.append(
@@ -150,6 +240,7 @@ def train(
                     "loss": loss,
                     "k": stage.k,
                     "beta": stage.beta,
+                    "n_workers": n_active,
                     "sim_time": sim_time,
                     "contributors": float(metrics["contributors"]),
                     "grad_norm": float(metrics["grad_norm"]),
@@ -162,14 +253,23 @@ def train(
                 ckpt.save_async(
                     step + 1,
                     {"params": params, "opt": opt_state},
-                    extras={"stage": dataclasses.asdict(ctrl.stage)},
+                    extras={
+                        "stage": dataclasses.asdict(ctrl.stage),  # legacy key
+                        "controller": ctrl.state_dict(),
+                        "tracker": tracker.state_dict(),
+                        "alive": [int(a) for a in alive],
+                        "slow_factor": [float(f) for f in slow_factor],
+                        "sim_time": sim_time,
+                        "rng_state": rng.bit_generator.state,
+                        "stream_rng_state": batcher.stream.rng.bit_generator.state,
+                    },
                 )
 
             if loop_cfg.log_every and step % loop_cfg.log_every == 0:
                 print(
                     f"step {step:5d} loss {loss:8.4f} k={stage.k:2d} "
                     f"beta={stage.beta:4.2f} t={sim_time:9.2f} "
-                    f"workers={int(alive.sum())}",
+                    f"workers={n_active}",
                     flush=True,
                 )
 
@@ -180,14 +280,8 @@ def train(
         "params": params,
         "opt_state": opt_state,
         "controller": ctrl,
+        "tracker": tracker,
+        "alive": alive,
         "compiled_shapes": list(step_fn_cache.keys()),
         "sim_time": sim_time,
     }
-
-
-class _nullcontext:
-    def __enter__(self):
-        return None
-
-    def __exit__(self, *a):
-        return False

@@ -108,10 +108,10 @@ class HedgedRouter:
     # -- pricing -------------------------------------------------------------
     def _slowdowns(self) -> np.ndarray:
         """Per-replica slowdown estimates (1.0 until telemetry warms up)."""
-        if self.tracker.count < self.tracker.warmup:
+        if int(self.tracker.rounds.max(initial=0)) < self.tracker.warmup:
             return np.ones(self.n_replicas)
         s = self.tracker.slowdown()
-        return np.where(s > 0, s, 1.0)
+        return np.where(np.isfinite(s) & (s > 0), s, 1.0)
 
     def available(self) -> List[int]:
         return [

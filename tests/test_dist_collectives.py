@@ -8,7 +8,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.dist.collectives import contributors, example_weights, masked_weighted_ce
+from repro.dist.collectives import (
+    check_worker_major,
+    contributors,
+    example_weights,
+    masked_weighted_ce,
+)
 from repro.dist.compression import Int8Codec, ef_compress_tree
 from repro.dist.sharding import (
     DEFAULT_RULES,
@@ -123,6 +128,24 @@ def test_example_weights_rejects_ragged_batch():
 
 def test_contributors_counts_mask():
     assert float(contributors(jnp.array([1.0, 0.0, 1.0, 1.0]))) == 3.0
+
+
+def test_check_worker_major_contract():
+    """Mask-vs-batch shape contract: the mask must be sized for the
+    fleet that produced THIS batch."""
+    assert check_worker_major(16, 4) == 4
+    assert check_worker_major(16, 8) == 2
+    # A stale larger-fleet batch against a shrunken fleet must fail loudly
+    # instead of silently misassigning rows to the wrong workers.
+    with pytest.raises(ValueError, match="not divisible"):
+        check_worker_major(16, 3)
+    with pytest.raises(ValueError, match="at least one"):
+        check_worker_major(16, 0)
+
+
+def test_example_weights_rejects_2d_mask():
+    with pytest.raises(ValueError, match="1-D"):
+        example_weights(jnp.ones((2, 2)), batch=8)
 
 
 def test_masked_ce_with_token_mask_and_worker_mask():

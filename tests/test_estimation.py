@@ -12,6 +12,7 @@ from repro.core import (
     StrategyConfig,
     fit_generalized_mm,
     fit_simplified_mle,
+    fit_simplified_mle_censored,
 )
 
 
@@ -52,6 +53,63 @@ def test_mle_shift_never_exceeds_min_sample(lam, x):
     fit = fit_simplified_mle(z, np.full(500, 0.7))
     assert fit.shift <= z.min() + 1e-12
     assert fit.lambda_y > 0
+
+
+def _fastest_k_telemetry(true, rng, n, k, beta, rounds):
+    """What a fastest-k loop actually sees: per round, the k smallest of
+    n response times plus (n - k) workers censored at z_(k)."""
+    zs, bs, cs = [], [], []
+    for _ in range(rounds):
+        z = np.sort(true.sample(rng, n, beta))[:k]
+        c = np.zeros(k)
+        c[-1] = n - k
+        zs.append(z)
+        bs.append(np.full(k, beta))
+        cs.append(c)
+    return np.concatenate(zs), np.concatenate(bs), np.concatenate(cs)
+
+
+def test_censored_mle_recovers_from_fastest_k_telemetry():
+    """The k order statistics alone are a biased-fast sample; the
+    Epstein–Sobel total-time-on-test correction must undo the bias."""
+    true = SimplifiedDelayModel(lambda_y=2.0, x=0.1)
+    rng = np.random.default_rng(3)
+    z, b, c = _fastest_k_telemetry(true, rng, n=10, k=3, beta=0.5, rounds=3000)
+    fit = fit_simplified_mle_censored(z, b, c)
+    assert fit.lambda_y == pytest.approx(true.lambda_y, rel=0.1)
+    # The old bug: fitting the winners as if they were an i.i.d. fleet
+    # sample wildly overestimates the rate (workers look too fast).
+    naive = fit_simplified_mle(z, b)
+    assert naive.lambda_y > 2.0 * true.lambda_y
+    assert abs(fit.lambda_y - true.lambda_y) < abs(naive.lambda_y - true.lambda_y)
+
+
+def test_censored_mle_reduces_to_uncensored():
+    true = SimplifiedDelayModel(lambda_y=1.5, x=0.2)
+    rng = np.random.default_rng(4)
+    z = true.sample(rng, 2000, 0.8)
+    b = np.full(2000, 0.8)
+    plain = fit_simplified_mle(z, b)
+    via_none = fit_simplified_mle_censored(z, b, None)
+    via_zeros = fit_simplified_mle_censored(z, b, np.zeros(2000))
+    for fit in (via_none, via_zeros):
+        assert fit.lambda_y == pytest.approx(plain.lambda_y, rel=1e-9)
+        assert fit.shift == pytest.approx(plain.shift, abs=1e-12)
+
+
+def test_controller_buffers_censoring_counts():
+    cfg = StrategyConfig("adaptive_kbeta", n=6, s=10, k_max=3)
+    ctrl = Controller(cfg, model=None, estimate_model=True)
+    true = SimplifiedDelayModel(lambda_y=1.0, x=0.05)
+    rng = np.random.default_rng(5)
+    for _ in range(200):
+        k = ctrl.stage.k
+        z = np.sort(true.sample(rng, 6, ctrl.stage.beta))[:k]
+        ctrl.observe(response_times=z, n_unobserved=6 - k)
+    assert sum(ctrl._rt_censored) > 0
+    est = ctrl.current_model()
+    assert est is not None
+    assert est.lambda_y == pytest.approx(1.0, rel=0.35)
 
 
 def test_controller_estimated_model_drives_beta_choice():

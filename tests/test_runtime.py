@@ -220,3 +220,78 @@ def test_straggler_tracker_flags_persistent_straggler():
         z[3] *= 10.0  # worker 3 is 10x slower on average
         tr.observe(z, alive)
     assert tr.persistent_stragglers(4.0) == [3]
+
+
+def test_straggler_tracker_late_joiner_seeds_from_own_data():
+    """Regression: seeding must be per-worker, not on the tracker's first
+    observation globally. A worker first observed late must start from
+    ITS first sample, not crawl up from the zero init (which made late
+    joiners look artificially fast and immune to demotion)."""
+    n = 4
+    tr = StragglerTracker(n, warmup=4)
+    alive = np.ones(n, bool)
+    late = np.array([False, False, False, True])
+    for _ in range(20):
+        tr.observe(np.array([1.0, 1.0, 1.0, np.inf]), alive & ~late)
+    # worker 3 joins, persistently 8x slower
+    for _ in range(10):
+        tr.observe(np.array([1.0, 1.0, 1.0, 8.0]), alive)
+    est = tr.mean_estimate()
+    assert est[3] == pytest.approx(8.0, rel=0.05), \
+        "late joiner's estimate must be seeded from its own first sample"
+    assert tr.persistent_stragglers(4.0) == [3]
+
+
+def test_straggler_tracker_censored_never_observed_worker():
+    """Under fastest-k the straggler is NEVER observed — only censored at
+    z_(k). The time-on-test estimate must still grow past any threshold,
+    but only be flagged once the expected-wins fairness guard is met.
+    (Default warmup: with k/n = 1/4, transient estimates of unlucky
+    normal workers need ~16 rounds to settle.)"""
+    n = 4
+    tr = StragglerTracker(n, min_expected_wins=4.0)
+    alive = np.ones(n, bool)
+    rng = np.random.default_rng(1)
+    flagged_at = None
+    for t in range(40):
+        z = rng.exponential(1.0, n)
+        z[0] = np.inf  # the straggler never makes the fastest k
+        observed = np.zeros(n, bool)
+        observed[np.argmin(z)] = True  # k = 1
+        level = float(z[observed][0])
+        tr.observe(np.where(observed, z, np.nan), alive,
+                   observed=observed, censor_level=level)
+        flags = tr.persistent_stragglers(3.0)
+        if flagged_at is None and flags:
+            flagged_at = t
+            assert flags == [0]
+    assert flagged_at is not None, "censored straggler must be caught"
+    # k/n = 1/4 per round: expected wins reach 4.0 only at round 16
+    assert flagged_at >= 15, "fairness guard must delay the verdict"
+
+
+def test_straggler_tracker_state_roundtrip():
+    n = 3
+    tr = StragglerTracker(n, warmup=2)
+    rng = np.random.default_rng(2)
+    alive = np.ones(n, bool)
+    for _ in range(10):
+        tr.observe(rng.exponential(1.0, n) * np.array([1, 1, 6.0]), alive)
+    tr2 = StragglerTracker(n, warmup=2)
+    tr2.load_state_dict(tr.state_dict())
+    np.testing.assert_array_equal(tr2.mean_estimate(), tr.mean_estimate())
+    assert tr2.persistent_stragglers(3.0) == tr.persistent_stragglers(3.0)
+    with pytest.raises(ValueError):
+        StragglerTracker(n + 1).load_state_dict(tr.state_dict())
+
+
+def test_tracker_reset_worker_forgets_history():
+    n = 4
+    tr = StragglerTracker(n, warmup=2)
+    alive = np.ones(n, bool)
+    for _ in range(10):
+        tr.observe(np.array([1.0, 1.0, 1.0, 9.0]), alive)
+    assert tr.persistent_stragglers(4.0) == [3]
+    tr.reset_worker(3)  # recovered + rejoined: stale slowness must not demote
+    assert tr.persistent_stragglers(4.0) == []
+    assert np.isnan(tr.mean_estimate()[3])

@@ -18,7 +18,7 @@ from repro.data import StagedBatcher, TokenStream
 from repro.models import build_model
 from repro.optim.optimizers import get_optimizer
 from repro.runtime.steps import make_train_step
-from repro.runtime.train_loop import TrainLoopConfig, train
+from repro.runtime.train_loop import FaultEvent, TrainLoopConfig, train
 
 
 def _tiny():
@@ -100,6 +100,80 @@ def test_grad_accumulation_matches_direct():
     for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    atol=1e-5, rtol=1e-4)
+
+
+def test_resume_replays_identical_history():
+    """Exact resume: the resumed run's history must equal the
+    uninterrupted run's tail field-for-field (loss, stage, sim-time,
+    fleet) because controller state, tracker state, membership, and both
+    RNG streams round-trip through the checkpoint."""
+    cfg, model, strategy, delay, batcher = _setup()
+    events = [FaultEvent(step=8, kind="slow", worker=1, factor=3.0),
+              FaultEvent(step=15, kind="fail", worker=2),
+              FaultEvent(step=32, kind="rejoin", worker=2)]
+    with tempfile.TemporaryDirectory() as d:
+        mk = lambda: TrainLoopConfig(total_steps=44, log_every=0,
+                                     checkpoint_dir=d, checkpoint_every=20,
+                                     events=events)
+        out1 = train(model, get_optimizer("adamw"), strategy, delay, batcher,
+                     mk())
+        # Fresh everything: all live state must come from the checkpoint.
+        cfg2, model2, strategy2, delay2, batcher2 = _setup()
+        out2 = train(model2, get_optimizer("adamw"), strategy2, delay2,
+                     batcher2, mk())
+        tail = [h for h in out1["history"] if h["step"] >= 40]
+        assert out2["history"][0]["step"] == 40
+        assert len(out2["history"]) == len(tail)
+        for a, b in zip(tail, out2["history"]):
+            assert a == b, f"resume diverged at step {a['step']}"
+        assert out2["controller"].cfg.n == out1["controller"].cfg.n
+        np.testing.assert_array_equal(out2["alive"], out1["alive"])
+
+
+def test_rejoin_restores_fleet_and_k_max():
+    cfg, model, strategy, delay, batcher = _setup()
+    out = train(model, get_optimizer("adamw"), strategy, delay, batcher,
+                TrainLoopConfig(total_steps=30, log_every=0,
+                                events=[FaultEvent(5, "fail", 1),
+                                        FaultEvent(15, "rejoin", 1)]))
+    ctrl = out["controller"]
+    assert ctrl.cfg.n == strategy.n, "rejoin must restore n"
+    assert ctrl.cfg.k_max == strategy.k_max, "rejoin must restore k_max cap"
+    assert out["alive"].all()
+    n_by_step = {h["step"]: h["n_workers"] for h in out["history"]}
+    assert n_by_step[10] == strategy.n - 1
+    assert n_by_step[20] == strategy.n
+
+
+def test_loop_fits_delay_model_from_censored_telemetry_only():
+    """oracle_to_controller=False: every (k, beta) decision prices off a
+    model fitted purely from the k order statistics the loop waited for."""
+    cfg, model, strategy, delay, batcher = _setup()
+    out = train(model, get_optimizer("adamw"), strategy, delay, batcher,
+                TrainLoopConfig(total_steps=80, log_every=0,
+                                estimate_model=True,
+                                oracle_to_controller=False))
+    ctrl = out["controller"]
+    assert ctrl.oracle_model is None
+    assert sum(ctrl._rt_censored) > 0, "fastest-k telemetry must be censored"
+    est = ctrl.current_model()
+    assert est is not None
+    # True lambda_y = 1.0; the censored fit must land in its vicinity
+    # even though most workers' times were never observed.
+    assert 0.5 < est.lambda_y < 2.0
+    stages = {(h["k"], h["beta"]) for h in out["history"]}
+    assert len(stages) >= 2, "fitted model must still drive stage advances"
+
+
+def test_batcher_resizes_batch_for_current_fleet():
+    cfg, model, strategy, delay, batcher = _setup(n=4, global_batch=16)
+    full = batcher.batch_for_stage(1.0)["inputs"].shape[0]
+    shrunk = batcher.batch_for_stage(1.0, n_workers=3)["inputs"].shape[0]
+    assert full == 16
+    assert shrunk == 12, "per-worker share stays fixed; batch tracks fleet"
+    assert batcher.batch_shape(1.0, n_workers=3)[0] == 12
+    with pytest.raises(ValueError):
+        batcher.batch_for_stage(1.0, n_workers=0)
 
 
 def test_straggler_demotion_in_loop():
