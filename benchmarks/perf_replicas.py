@@ -1,0 +1,200 @@
+"""Serving-plane chaos benchmark: replica kill/rejoin under saturation.
+
+Drives the multi-replica ``Frontend`` (hedged dispatch, real loser
+cancellation, deadline/retry, KV migration — DESIGN.md §13) over the
+same deterministic virtual-time machinery as ``perf_serve``, and
+measures what a mid-saturation replica failure costs:
+
+  * ``fault_free``  — N replicas, no chaos: the latency baseline.
+  * ``kill_rejoin`` — one replica fails once the plane is saturated and
+    rejoins later; the router re-prices from the shrunken fleet, orphan
+    requests requeue from their longest emitted prefix.
+  * ``drain``       — the same interruption as a graceful decommission:
+    in-flight requests migrate off via KV block handoff (no re-prefill).
+
+Hard gates (enforced here AND by the serve-chaos CI job):
+
+  * every request completes in every scenario — zero drops;
+  * every token stream is byte-identical to the fault-free run (greedy
+    determinism survives failover, requeue, and migration);
+  * kill_rejoin p99 latency <= 1.5x the fault-free p99 (losing a third
+    of the fleet degrades the tail, it must not collapse it).
+
+    PYTHONPATH=src python -m benchmarks.perf_replicas [--full] [--out PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import time
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.delay_models import SimplifiedDelayModel
+from repro.models import build_model
+from repro.runtime.faults import FaultEvent
+from repro.serve import Frontend, Replica, generate_offline
+
+DEFAULT_OUT = "BENCH_replicas.json"
+
+ARCH = "smollm"
+N_REPLICAS = 3
+N_SLOTS = 4
+MAX_LEN = 96
+BLOCK_SIZE = 8
+SEED = 11
+P99_GATE = 1.5
+
+
+def make_workload(
+    n_requests: int, rate: float, vocab: int, seed: int = SEED
+) -> List[Tuple[np.ndarray, int, float]]:
+    rng = np.random.default_rng(seed)
+    reqs = []
+    t = 0.0
+    for _ in range(n_requests):
+        p_len = int(rng.integers(4, 20))
+        n_new = int(rng.integers(4, 32))
+        t += float(rng.exponential(1.0 / rate))
+        prompt = rng.integers(0, vocab, size=p_len).astype(np.int32)
+        reqs.append((prompt, n_new, t))
+    return reqs
+
+
+def _fleet(model, params):
+    return [
+        Replica(i, model, params, n_slots=N_SLOTS, max_len=MAX_LEN,
+                block_size=BLOCK_SIZE)
+        for i in range(N_REPLICAS)
+    ]
+
+
+def _run_plane(model, params, reqs, events=(), **kw):
+    delay = SimplifiedDelayModel(lambda_y=2.0)
+    fe = Frontend(
+        _fleet(model, params), delay,
+        cost_per_replica=kw.pop("cost_per_replica", 0.05),
+        events=list(events), **kw,
+    )
+    gids = [fe.submit(p, m, arrival=a) for p, m, a in reqs]
+    t0 = time.perf_counter()
+    out = fe.run()
+    wall = time.perf_counter() - t0
+    streams = [out[g].tokens for g in gids]
+    lats = np.array([out[g].latency for g in gids if out[g].done])
+    s = fe.summary()
+    return fe, {
+        "completed": int(s["completed"]),
+        "dropped": int(s["dropped"]),
+        "retries": int(s["retries"]),
+        "migrations": int(s["migrations"]),
+        "cancelled_copies": int(s["cancelled_copies"]),
+        "ticks": fe.ticks,
+        "latency_p50_vsec": round(float(np.percentile(lats, 50)), 5),
+        "latency_p99_vsec": round(float(np.percentile(lats, 99)), 5),
+        "wall_seconds": round(wall, 3),
+    }, streams
+
+
+def run(fast: bool = True, out: Optional[str] = None) -> dict:
+    import jax
+
+    cfg = get_config(ARCH).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    n_requests = 10 if fast else 28
+    rate = 60.0
+    reqs = make_workload(n_requests, rate, cfg.vocab_size)
+
+    # Reference streams: per-request offline greedy decode (also warms
+    # the jit caches before any wall clock starts).
+    refs = [generate_offline(model, params, p, m, MAX_LEN) for p, m, _ in reqs]
+
+    # -- fault-free baseline -------------------------------------------------
+    _, base, base_streams = _run_plane(model, params, reqs)
+    assert base["dropped"] == 0 and base["completed"] == n_requests
+    assert base_streams == refs, "fault-free streams must match offline"
+
+    # Chaos timing derives from the measured fault-free plane length, so
+    # the kill always lands mid-saturation regardless of workload size.
+    t_fail = max(int(base["ticks"] * 0.3), 1)
+    t_join = max(int(base["ticks"] * 0.7), t_fail + 1)
+
+    # -- kill one replica at saturation, rejoin later ------------------------
+    kill_events = [FaultEvent(step=t_fail, kind="fail", worker=1),
+                   FaultEvent(step=t_join, kind="rejoin", worker=1)]
+    _, kill, kill_streams = _run_plane(model, params, reqs, kill_events)
+    assert kill["dropped"] == 0 and kill["completed"] == n_requests, (
+        f"chaos run dropped requests: {kill}"
+    )
+    assert kill_streams == refs, "chaos streams must be byte-identical"
+    p99_ratio = kill["latency_p99_vsec"] / max(base["latency_p99_vsec"], 1e-12)
+    assert p99_ratio <= P99_GATE, (
+        f"p99 under single-replica kill degraded {p99_ratio:.2f}x "
+        f"(gate {P99_GATE}x)"
+    )
+
+    # -- graceful decommission: KV migration instead of request loss --------
+    # Single-copy dispatch (high replica cost) so the drain MUST move
+    # state — hedge copies can't cover it.
+    drain_events = [FaultEvent(step=t_fail, kind="drain", worker=0),
+                    FaultEvent(step=3 * t_join, kind="rejoin", worker=0)]
+    _, drain, drain_streams = _run_plane(
+        model, params, reqs, drain_events, cost_per_replica=10.0
+    )
+    assert drain["dropped"] == 0 and drain_streams == refs
+
+    print(f"{'scenario':>12s} {'p50':>9s} {'p99':>9s} {'retries':>8s} "
+          f"{'migr':>5s} {'cancelled':>10s}")
+    for name, r in (("fault_free", base), ("kill_rejoin", kill),
+                    ("drain", drain)):
+        print(f"{name:>12s} {r['latency_p50_vsec']:9.4f} "
+              f"{r['latency_p99_vsec']:9.4f} {r['retries']:8d} "
+              f"{r['migrations']:5d} {r['cancelled_copies']:10d}")
+    print(f"kill_rejoin p99 ratio: {p99_ratio:.3f}x (gate {P99_GATE}x)")
+
+    payload = {
+        "benchmark": "perf_replicas",
+        "mode": "fast" if fast else "full",
+        "arch": cfg.name,
+        "n_replicas": N_REPLICAS,
+        "n_slots": N_SLOTS,
+        "max_len": MAX_LEN,
+        "block_size": BLOCK_SIZE,
+        "requests": n_requests,
+        "arrival_rate_per_vsec": rate,
+        "machine": platform.machine(),
+        "python": platform.python_version(),
+        "fault_free": base,
+        "kill_rejoin": kill,
+        "drain": drain,
+        "gates": {
+            "zero_dropped": True,
+            "byte_identical_streams": True,
+            "p99_kill_ratio": round(p99_ratio, 3),
+            "p99_gate": P99_GATE,
+        },
+    }
+    if out is not None:
+        with open(out, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {out}")
+    return payload
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="more requests (slower, steadier percentiles)")
+    ap.add_argument("--out", type=str, default=DEFAULT_OUT, metavar="PATH")
+    args = ap.parse_args()
+    run(fast=not args.full, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -55,8 +55,8 @@ def main() -> None:
     fast = not args.full
 
     from . import fig1_3_theory, fig4_simulation, fig5to7_general_model
-    from . import fig8to9_costs, perf_paged, perf_serve, perf_sim, perf_spec
-    from . import perf_train_adaptive, roofline_report
+    from . import fig8to9_costs, perf_paged, perf_replicas, perf_serve
+    from . import perf_sim, perf_spec, perf_train_adaptive, roofline_report
 
     benches = {
         "fig1_3_theory": fig1_3_theory.run,
@@ -66,6 +66,7 @@ def main() -> None:
         "perf_sim": perf_sim.run,
         "perf_serve": perf_serve.run,
         "perf_paged": perf_paged.run,
+        "perf_replicas": perf_replicas.run,
         "perf_spec": perf_spec.run,
         "perf_train_adaptive": perf_train_adaptive.run,
         "roofline_report": roofline_report.run,

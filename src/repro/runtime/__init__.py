@@ -1,9 +1,12 @@
 from .checkpoint import CheckpointManager
+from .faults import FaultEvent, schedule_by_step
 from .steps import make_decode_step, make_prefill_step, make_train_step
 from .telemetry import StragglerTracker
 
 __all__ = [
     "CheckpointManager",
+    "FaultEvent",
+    "schedule_by_step",
     "make_train_step",
     "make_prefill_step",
     "make_decode_step",

@@ -45,32 +45,13 @@ from repro.dist.sharding import activation_sharding
 from repro.models.model import Model
 from repro.optim.optimizers import Optimizer
 from repro.runtime.checkpoint import CheckpointManager
+# FaultEvent moved to repro.runtime.faults (PR 7) so the serving plane can
+# consume the same chaos schema; re-exported here for compatibility.
+from repro.runtime.faults import FaultEvent, schedule_by_step
 from repro.runtime.steps import make_train_step
 from repro.runtime.telemetry import StragglerTracker
 
 __all__ = ["FaultEvent", "TrainLoopConfig", "train"]
-
-
-@dataclasses.dataclass(frozen=True)
-class FaultEvent:
-    """A scheduled chaos event: worker ``worker`` at step ``step``.
-
-    kind:
-      * ``"fail"``   — the worker dies (permanent unless it rejoins);
-      * ``"rejoin"`` — a previously removed worker comes back healthy
-        (controller n+=1, telemetry history reset, slowdown cleared);
-      * ``"slow"``   — the worker's response times are multiplied by
-        ``factor`` from this step on (1.0 = recovered).
-    """
-
-    step: int
-    kind: str
-    worker: int
-    factor: float = 1.0
-
-    def __post_init__(self):
-        if self.kind not in ("fail", "rejoin", "slow"):
-            raise ValueError(f"unknown fault kind {self.kind!r}")
 
 
 @dataclasses.dataclass
@@ -93,10 +74,7 @@ def _event_schedule(cfg: TrainLoopConfig) -> Dict[int, List[FaultEvent]]:
     events = list(cfg.events)
     if cfg.fail_worker_at is not None:
         events.append(FaultEvent(cfg.fail_worker_at, "fail", cfg.fail_worker_id))
-    by_step: Dict[int, List[FaultEvent]] = {}
-    for ev in events:
-        by_step.setdefault(ev.step, []).append(ev)
-    return by_step
+    return schedule_by_step(events)
 
 
 def train(

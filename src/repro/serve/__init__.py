@@ -11,7 +11,14 @@ block arena with admit-by-budget admission so memory tracks live tokens
 hedged dispatch with ``expected_kth`` against EWMA straggler telemetry
 (router), and a draft model over a twin slot pool turns decode ticks
 into draft-then-verify rounds with an adaptively priced draft length
-(speculative, DESIGN.md §12).
+(speculative, DESIGN.md §12). On top of all that sits a REAL serving
+plane: N independent engine replicas with their own faultable clocks
+(replica) behind an async frontend (frontend) that dispatches hedges
+concurrently, actually frees loser slots and paged blocks on
+cancellation, polices per-request deadlines with bounded
+retry-and-requeue, degrades gracefully as the live fleet shrinks, and
+migrates in-flight requests between replicas by KV block handoff
+(DESIGN.md §13, chaos-tested in tests/test_replicas.py).
 
 Public API contract: modules split cleanly into SPEC-DRIVEN (engine,
 kv_pool, speculative — generic over any ``model.cache_specs`` tree; no
@@ -23,8 +30,16 @@ pinned per registered family by tests/test_serve.py and
 tests/test_speculative.py's byte-identity suites.
 """
 
-from .engine import EngineStats, ServeEngine, generate_offline, run_static
-from .kv_pool import BlockManager, SlotPool
+from .engine import (
+    EngineStats,
+    MigrationTicket,
+    ServeEngine,
+    generate_offline,
+    run_static,
+)
+from .frontend import Frontend, FrontendRequest
+from .kv_pool import BlockManager, SlotPool, SlotSnapshot
+from .replica import FaultyClock, Replica
 from .router import DispatchOutcome, HedgedRouter, HedgePlan, ReplicaSet
 from .scheduler import CostModel, EventClock, Request, Scheduler, next_bucket
 from .speculative import DraftRunner, GammaPlan, SpecController, hedged_round_cost
@@ -32,10 +47,16 @@ from .speculative import DraftRunner, GammaPlan, SpecController, hedged_round_co
 __all__ = [
     "ServeEngine",
     "EngineStats",
+    "MigrationTicket",
     "generate_offline",
     "run_static",
     "SlotPool",
+    "SlotSnapshot",
     "BlockManager",
+    "Replica",
+    "FaultyClock",
+    "Frontend",
+    "FrontendRequest",
     "Scheduler",
     "Request",
     "CostModel",

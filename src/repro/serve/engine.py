@@ -58,11 +58,33 @@ from repro.runtime.steps import (
     make_slot_verify_step,
 )
 
-from .kv_pool import SlotPool, model_scoped_cache
+from .kv_pool import SlotPool, SlotSnapshot, model_scoped_cache
 from .scheduler import CostModel, EventClock, Request, Scheduler, next_bucket
 from .speculative import DraftRunner, SpecController
 
-__all__ = ["ServeEngine", "EngineStats", "generate_offline", "run_static"]
+__all__ = [
+    "ServeEngine", "EngineStats", "MigrationTicket",
+    "generate_offline", "run_static",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class MigrationTicket:
+    """Everything needed to resume a mid-decode request on ANOTHER engine
+    of the same model + pool geometry: the immutable submission, the
+    tokens emitted so far, the next token to feed (``pending``), and the
+    slot's cache state as a :class:`SlotSnapshot`. Restoring re-admits
+    the request with its prefix already in cache — no re-prefill — and
+    the greedy continuation is byte-identical to never having moved
+    (pinned per arch family in tests)."""
+
+    prompt: np.ndarray
+    max_new_tokens: int
+    arrival: float
+    deadline: Optional[float]
+    tokens: Tuple[int, ...]       # emitted so far (stream prefix)
+    pending: int                  # next token to feed (last emitted)
+    snapshot: SlotSnapshot
 
 
 @dataclasses.dataclass
@@ -74,6 +96,9 @@ class EngineStats:
     spec_rounds: int = 0          # speculation rounds (draft + verify)
     draft_ticks: int = 0          # sequential draft decode ticks
     spec_accepted: int = 0        # draft tokens the target accepted
+    cancelled_requests: int = 0   # deadline expiries + explicit cancels
+    migrated_out: int = 0         # requests exported as MigrationTickets
+    migrated_in: int = 0          # tickets restored into this engine
     virtual_seconds: float = 0.0
     wall_seconds: float = 0.0
 
@@ -194,8 +219,12 @@ class ServeEngine:
 
     # -- submission ----------------------------------------------------------
     def submit(
-        self, prompt, max_new_tokens: int, arrival: float = 0.0
+        self, prompt, max_new_tokens: int, arrival: float = 0.0,
+        deadline: Optional[float] = None,
     ) -> int:
+        """``deadline``: absolute virtual-time deadline; None defers to
+        the scheduler's ``deadline_ticks`` default (stamped at
+        admission)."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.size + max_new_tokens > self.pool.max_len:
             raise ValueError(
@@ -214,10 +243,155 @@ class ServeEngine:
                 )
         rid = self._next_rid
         self._next_rid += 1
-        req = Request(rid, prompt, int(max_new_tokens), float(arrival))
+        req = Request(
+            rid, prompt, int(max_new_tokens), float(arrival),
+            deadline=deadline,
+        )
         self._requests[rid] = req
         self.sched.submit(req)
         return rid
+
+    # -- cancellation / deadlines --------------------------------------------
+    def cancel(self, rid: int, reason: str = "cancelled") -> bool:
+        """Tear down an unfinished request NOW, wherever it is in its
+        lifecycle, actually freeing what it holds: a waiting request
+        leaves the queue; a mid-prefill or decoding request frees its
+        slot — and, in paged mode, returns its arena blocks, which is
+        what lets a queued request admit (hedged-loser cancellation is
+        only affordable because of this). Returns False if the request
+        is unknown, already finished, or already cancelled. The partial
+        token stream is kept on the request."""
+        req = self._requests.get(rid)
+        if req is None or req.t_done is not None or req.cancelled:
+            return False
+        self.sched.drop(req)
+        if rid in self.pool.owner:              # holds a slot (prefill/decode)
+            slot = self._slot_of(rid)
+            self._decoding[slot] = False
+            self._free_slot(slot)
+        req.t_cancelled = self.sched.clock.now
+        req.cancel_reason = reason
+        self.stats.cancelled_requests += 1
+        self.events.append(("cancel", self.sched.clock.now, rid))
+        return True
+
+    def _expire_deadlines(self) -> List[int]:
+        """Cancel every unfinished request past its deadline (reason
+        ``"deadline"``); returns their rids so a frontend can requeue
+        them elsewhere and record the expiry as censored telemetry."""
+        now = self.sched.clock.now
+        expired = [
+            rid for rid, req in self._requests.items()
+            if req.t_done is None and not req.cancelled
+            and req.deadline is not None and req.deadline <= now
+        ]
+        for rid in expired:
+            self.cancel(rid, reason="deadline")
+        return expired
+
+    # -- migration -----------------------------------------------------------
+    def export_request(self, rid: int) -> MigrationTicket:
+        """Snapshot a decoding request into a :class:`MigrationTicket`
+        and release everything it holds here (reason ``"migrated"``).
+
+        Only DECODING requests carry cache state worth handing off;
+        waiting / mid-prefill requests migrate by plain resubmission.
+        Speculative engines refuse: the draft pool's twin state is not
+        part of the snapshot, and a desynced draft would poison
+        lockstep. The position invariant checked here is the engine's
+        decode bookkeeping contract: after ``m`` emitted tokens the slot
+        has ``prompt_len + m - 1`` rows written and ``pending`` = token
+        ``m``, so the importing engine's next decode tick emits token
+        ``m + 1`` of the identical greedy stream."""
+        if self.speculative:
+            raise ValueError("cannot export from a speculative engine "
+                             "(draft twin state is not snapshotted)")
+        req = self._requests.get(rid)
+        if req is None or req.t_done is not None or req.cancelled:
+            raise ValueError(f"request {rid} is not live")
+        slot = self._slot_of(rid)
+        if not self._decoding[slot]:
+            raise ValueError(f"request {rid} is not decoding "
+                             "(migrate queued requests by resubmission)")
+        expect = req.prompt_len + len(req.tokens) - 1
+        assert int(self.pool.positions[slot]) == expect, (
+            f"slot {slot} position {self.pool.positions[slot]} != {expect}"
+        )
+        ticket = MigrationTicket(
+            prompt=req.prompt,
+            max_new_tokens=req.max_new_tokens,
+            arrival=req.arrival,
+            deadline=req.deadline,
+            tokens=tuple(req.tokens),
+            pending=int(self._pending[slot]),
+            snapshot=self.pool.snapshot_slot(slot),
+        )
+        self._decoding[slot] = False
+        self._free_slot(slot)
+        req.t_cancelled = self.sched.clock.now
+        req.cancel_reason = "migrated"
+        self.stats.migrated_out += 1
+        self.events.append(("migrate_out", self.sched.clock.now, rid))
+        return ticket
+
+    def import_request(self, ticket: MigrationTicket) -> Optional[int]:
+        """Re-admit a migrated request with its cache prefix restored —
+        no re-prefill. Returns the new local rid, or None when the pool
+        cannot admit it right now (no free slot / not enough blocks):
+        the caller keeps the ticket and retries after capacity frees, or
+        falls back to resubmitting prompt + emitted tokens."""
+        if self.speculative:
+            raise ValueError("cannot import into a speculative engine "
+                             "(draft twin state is not snapshotted)")
+        budget = int(ticket.prompt.size) + int(ticket.max_new_tokens)
+        if budget > self.pool.max_len:
+            raise ValueError("ticket exceeds this engine's max_len")
+        rid = self._next_rid
+        slot = self.pool.restore_slot(ticket.snapshot, owner=rid, n_tokens=budget)
+        if slot is None:
+            return None
+        self._next_rid += 1
+        req = Request(
+            rid, ticket.prompt, int(ticket.max_new_tokens),
+            float(ticket.arrival), deadline=ticket.deadline,
+        )
+        req.tokens = list(ticket.tokens)
+        req.prefilled = req.prompt_len
+        req.t_admit = self.sched.clock.now
+        req.t_first_token = self.sched.clock.now
+        self._requests[rid] = req
+        self._pending[slot] = np.int32(ticket.pending)
+        self._decoding[slot] = True
+        self.stats.migrated_in += 1
+        self.events.append(("migrate_in", self.sched.clock.now, rid))
+        return rid
+
+    # -- introspection (frontend/replica layers) -----------------------------
+    def request(self, rid: int) -> Request:
+        return self._requests[rid]
+
+    def live_rids(self) -> List[int]:
+        """Requests neither finished nor cancelled (queued, mid-prefill,
+        or decoding)."""
+        return [
+            rid for rid, r in self._requests.items()
+            if r.t_done is None and not r.cancelled
+        ]
+
+    def decoding_rids(self) -> List[int]:
+        """Requests mid-decode — the ones that carry migratable cache
+        state (``export_request``)."""
+        return [
+            self.pool.owner[int(s)] for s in np.nonzero(self._decoding)[0]
+        ]
+
+    @property
+    def has_work(self) -> bool:
+        """True while a ``step()`` would do something other than idle
+        forever (active slots, queued arrivals, or mid-prefill work)."""
+        return bool(
+            self.pool.n_active > 0 or self.sched.waiting or self.sched.running
+        )
 
     # -- actions -------------------------------------------------------------
     def _slot_of(self, rid: int) -> int:
@@ -479,7 +653,10 @@ class ServeEngine:
 
     # -- driver --------------------------------------------------------------
     def step(self) -> str:
-        """Run one scheduler action; returns its kind."""
+        """Run one scheduler action; returns its kind. Deadlines are
+        policed here, before the action is chosen — an expired request's
+        slot (and blocks) are free by the time admission is priced."""
+        self._expire_deadlines()
         kind, req = self.sched.next_action(
             self.pool.n_active, self.pool.n_free, self._can_admit
         )

@@ -1,0 +1,419 @@
+"""Async serving frontend: hedged dispatch over N replicas with chaos
+failover, bounded retry, and in-flight KV migration.
+
+This is the serving analogue of the training loop's elastic failover:
+the frontend owns a fleet of ``Replica`` engines and a ``HedgedRouter``,
+and every request is dispatched per the router's order-statistic pricing
+— ``n_h`` concurrent copies, keep the first to finish, cancel the rest.
+Cancellation here is REAL: a hedged loser's engine slot and paged arena
+blocks are freed the moment the winner lands (``ServeEngine.cancel``),
+which is what makes hedging affordable under memory pressure, and the
+loser is fed to the tracker as CENSORED telemetry (all we learn is
+"slower than the winner") — the same fastest-k censoring discipline the
+paper's training side uses.
+
+Failure semantics (docs/serving.md "Failure semantics"):
+
+* **Deadlines** — each dispatch attempt carries an absolute deadline
+  (``deadline`` budget from local dispatch time). The engine polices it
+  every step; an expired copy frees its slot/blocks and surfaces as a
+  censored observation at the deadline level. When every copy of a
+  request expires, the request requeues (bounded by ``retry_budget``)
+  and re-enters hedged dispatch — typically landing on faster replicas,
+  since the expiry telemetry just repriced the slow ones.
+* **Retry-and-requeue** — a retry does NOT restart generation: greedy
+  decode is deterministic, so every copy's partial output is a prefix of
+  the same stream; the longest harvested prefix is appended to the
+  prompt and only the remaining tokens are regenerated. Final streams
+  are byte-identical to a fault-free run.
+* **Fleet degradation** — a dead replica is marked out of the fleet and
+  the router re-prices from the shrunken fleet: quorum clamps to the
+  live count, fan-outs re-run over whoever is left. The frontend never
+  stalls while at least one replica lives.
+* **Migration** — ``drain(r)`` hands every decoding request off replica
+  ``r`` to the healthiest peer with capacity via
+  ``ServeEngine.export_request`` / ``import_request``: the slot's owned
+  KV blocks and recurrent lanes move, no re-prefill, and the greedy
+  continuation is byte-identical to never having moved.
+
+Chaos enters as a declarative ``FaultEvent`` schedule (shared with the
+training runtime, ``repro.runtime.faults``) keyed on plane-wide engine
+steps: ``fail`` / ``slow`` / ``rejoin`` plus the serving-only ``drain``
+(graceful decommission: migrate everything off, then leave the fleet).
+The frontend reacts only to observables — completions, response times,
+liveness marks — never to the schedule itself.
+
+Public API contract: MODEL-AGNOSTIC and deterministic — same workload +
+same schedule -> same token streams, same virtual latencies. All policy
+(hedging, retry, migration targets) lives here; replicas own time and
+liveness; engines own slots and caches.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.runtime.faults import FaultEvent, schedule_by_step
+
+from .replica import Replica
+from .router import HedgedRouter, HedgePlan
+
+__all__ = ["FrontendRequest", "Frontend"]
+
+
+@dataclasses.dataclass
+class FrontendRequest:
+    """One logical request as the frontend sees it — possibly served by
+    several engine-local copies (hedges, retries, migrations) over its
+    lifetime. ``tokens`` is the committed stream prefix stitched across
+    attempts; ``partial`` buffers the best prefix harvested from the
+    current attempt's dead copies until requeue."""
+
+    gid: int
+    prompt: np.ndarray
+    max_new_tokens: int
+    arrival: float
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    partial: List[int] = dataclasses.field(default_factory=list)
+    retries: int = 0
+    copies: Dict[int, int] = dataclasses.field(default_factory=dict)
+    t0: Dict[int, float] = dataclasses.field(default_factory=dict)
+    plan: Optional[HedgePlan] = None
+    t_done: Optional[float] = None
+    winner: Optional[int] = None
+    dropped: bool = False
+
+    @property
+    def done(self) -> bool:
+        return self.t_done is not None
+
+    @property
+    def latency(self) -> float:
+        return (self.t_done - self.arrival) if self.done else np.inf
+
+
+class Frontend:
+    def __init__(
+        self,
+        replicas: Sequence[Replica],
+        delay_model,
+        *,
+        quorum: int = 1,
+        cost_per_replica: float = 0.0,
+        beta: float = 1.0,
+        deadline: Optional[float] = None,
+        retry_budget: int = 3,
+        events: Sequence[FaultEvent] = (),
+        n_max: Optional[int] = None,
+        ewma_alpha: float = 0.1,
+        warmup: int = 8,
+    ):
+        """``deadline``: per-ATTEMPT virtual-second budget from local
+        dispatch time (None = no deadlines). ``events``: chaos schedule
+        keyed on plane-wide engine steps (``self.ticks``)."""
+        if not replicas:
+            raise ValueError("need at least one replica")
+        self.replicas = list(replicas)
+        n_slots = self.replicas[0].engine.pool.n_slots
+        self.router = HedgedRouter(
+            delay_model, n_replicas=len(self.replicas),
+            quorum=quorum, cost_per_replica=cost_per_replica,
+            slots_per_replica=n_slots, n_max=n_max,
+            ewma_alpha=ewma_alpha, warmup=warmup,
+        )
+        self.beta = float(beta)
+        self.deadline = deadline
+        self.retry_budget = int(retry_budget)
+        self.schedule = schedule_by_step(events)
+        self.ticks = 0                      # plane-wide engine steps
+        self.queue: List[FrontendRequest] = []
+        self.inflight: Dict[int, FrontendRequest] = {}
+        self.results: Dict[int, FrontendRequest] = {}
+        self.dropped: List[int] = []
+        self.migrations = 0
+        self._next_gid = 0
+
+    # -- submission ----------------------------------------------------------
+    def submit(self, prompt, max_new_tokens: int, arrival: float = 0.0) -> int:
+        gid = self._next_gid
+        self._next_gid += 1
+        fr = FrontendRequest(
+            gid, np.asarray(prompt, np.int32).reshape(-1),
+            int(max_new_tokens), float(arrival),
+        )
+        self.queue.append(fr)
+        return gid
+
+    # -- time ----------------------------------------------------------------
+    def _frontier(self) -> float:
+        return max((rep.now for rep in self.replicas if rep.alive), default=0.0)
+
+    # -- fault surface -------------------------------------------------------
+    def _apply(self, ev: FaultEvent) -> None:
+        rep = self.replicas[ev.worker]
+        if ev.kind == "fail":
+            self._on_fail(ev.worker)
+        elif ev.kind == "slow":
+            if rep.alive:
+                rep.set_slow(ev.factor)
+        elif ev.kind == "rejoin":
+            if rep.alive:
+                rep.set_slow(1.0)
+            else:
+                rep.rejoin(self._frontier())
+                self.router.mark_joined(ev.worker)
+        elif ev.kind == "drain":
+            if rep.alive:
+                self.drain(ev.worker)
+                rep.alive = False
+                self.router.mark_failed(ev.worker)
+        else:
+            raise ValueError(f"unknown fault kind {ev.kind!r}")
+
+    def _on_fail(self, r: int) -> None:
+        rep = self.replicas[r]
+        if not rep.alive:
+            return
+        self.router.mark_failed(r)
+        by_rid = {req.rid: req for req in rep.fail()}
+        for fr in list(self.inflight.values()):
+            rid = fr.copies.pop(r, None)
+            if rid is None:
+                continue
+            fr.t0.pop(r, None)
+            self.router.release(r)
+            local = by_rid.get(rid)
+            if local is not None and len(local.tokens) > len(fr.partial):
+                fr.partial = list(local.tokens)
+            if not fr.copies:
+                # The hedge didn't cover this failure: requeue from the
+                # longest prefix any dead copy got to.
+                self._requeue(fr)
+
+    # -- migration -----------------------------------------------------------
+    def drain(self, r: int) -> int:
+        """Migrate every in-flight copy off replica ``r``: decoding
+        copies move their KV state (block handoff, no re-prefill);
+        queued / mid-prefill copies just requeue. Returns the number of
+        KV migrations performed."""
+        rep = self.replicas[r]
+        before = self.migrations
+        decoding = set(rep.engine.decoding_rids())
+        for fr in list(self.inflight.values()):
+            rid = fr.copies.get(r)
+            if rid is None:
+                continue
+            if not (rid in decoding and self._migrate(fr, r, rid)):
+                self._abandon_copy(fr, r, rid)
+        return self.migrations - before
+
+    def _migrate(self, fr: FrontendRequest, src: int, rid: int) -> bool:
+        """KV block handoff: export from ``src``, import into the
+        fastest-estimated alive peer that can admit it. Returns True
+        once the copy is fully handled — moved, or (every import
+        refused) torn down with its tokens seeding the requeue prefix.
+        False only when there is no peer to even try, leaving the copy
+        for the caller to abandon."""
+        rep = self.replicas[src]
+        slow = self.router._slowdowns()
+        dests = sorted(
+            (d for d in self.replicas if d.alive and d.id != src),
+            key=lambda d: (slow[d.id], d.id),
+        )
+        if not dests:
+            return False
+        ticket = rep.engine.export_request(rid)
+        elapsed = rep.now - fr.t0[src]
+        for dest in dests:
+            adj = ticket
+            if ticket.deadline is not None:
+                # Absolute deadlines are clock-local: carry the REMAINING
+                # budget over to the destination's clock.
+                remaining = max(ticket.deadline - rep.now, 0.0)
+                adj = dataclasses.replace(
+                    ticket, deadline=dest.now + remaining
+                )
+            new_rid = dest.engine.import_request(adj)
+            if new_rid is None:
+                continue
+            del fr.copies[src]
+            del fr.t0[src]
+            fr.copies[dest.id] = new_rid
+            fr.t0[dest.id] = dest.now - elapsed   # preserve elapsed so far
+            self.router.release(src)
+            self.router.occupy(dest.id)
+            self.migrations += 1
+            return True
+        # No destination could admit: the ticket dies, but its tokens
+        # seed the requeue prefix (ticket.tokens = the full local stream).
+        if len(ticket.tokens) > len(fr.partial):
+            fr.partial = list(ticket.tokens)
+        del fr.copies[src]
+        del fr.t0[src]
+        self.router.release(src)
+        if not fr.copies:
+            self._requeue(fr)
+        return True
+
+    def _abandon_copy(self, fr: FrontendRequest, r: int, rid: int) -> None:
+        eng = self.replicas[r].engine
+        local = eng.request(rid)
+        eng.cancel(rid)
+        if len(local.tokens) > len(fr.partial):
+            fr.partial = list(local.tokens)
+        fr.copies.pop(r, None)
+        fr.t0.pop(r, None)
+        self.router.release(r)
+        if not fr.copies:
+            self._requeue(fr)
+
+    # -- dispatch ------------------------------------------------------------
+    def _dispatch(self) -> None:
+        self.queue.sort(key=lambda fr: (fr.arrival, fr.gid))
+        while self.queue:
+            plan = self.router.choose_hedge(self.beta)
+            if plan is None:
+                return
+            fr = self.queue.pop(0)
+            self.router.begin(plan)
+            fr.plan = plan
+            fr.copies, fr.t0 = {}, {}
+            prompt = fr.prompt
+            if fr.tokens:
+                prompt = np.concatenate(
+                    [fr.prompt, np.asarray(fr.tokens, np.int32)]
+                )
+            remaining = fr.max_new_tokens - len(fr.tokens)
+            for r in plan.replicas:
+                rep = self.replicas[r]
+                local_arr = max(rep.now, fr.arrival)
+                dl = None if self.deadline is None else local_arr + self.deadline
+                rid = rep.engine.submit(
+                    prompt, remaining, arrival=fr.arrival, deadline=dl
+                )
+                fr.copies[r] = rid
+                fr.t0[r] = local_arr
+            self.inflight[fr.gid] = fr
+
+    def _requeue(self, fr: FrontendRequest) -> None:
+        fr.tokens = fr.tokens + fr.partial
+        fr.partial = []
+        fr.plan, fr.copies, fr.t0 = None, {}, {}
+        self.inflight.pop(fr.gid, None)
+        if len(fr.tokens) >= fr.max_new_tokens:
+            # The dead copies had already finished the stream.
+            fr.t_done = self._frontier()
+            self.results[fr.gid] = fr
+        elif fr.retries >= self.retry_budget:
+            fr.dropped = True
+            self.dropped.append(fr.gid)
+            self.results[fr.gid] = fr
+        else:
+            fr.retries += 1
+            self.queue.append(fr)
+
+    # -- harvest -------------------------------------------------------------
+    def _harvest(self, rep: Replica) -> None:
+        r = rep.id
+        for fr in list(self.inflight.values()):
+            rid = fr.copies.get(r)
+            if rid is None:
+                continue
+            req = rep.engine.request(rid)
+            if req.t_done is not None:
+                self._resolve_winner(fr, r, req)
+            elif req.cancelled and req.cancel_reason == "deadline":
+                self._copy_expired(fr, r)
+
+    def _resolve_winner(self, fr: FrontendRequest, winner: int, req) -> None:
+        rep = self.replicas[winner]
+        elapsed = rep.now - fr.t0[winner]
+        participants = list(fr.copies)
+        for r, rid in list(fr.copies.items()):
+            if r != winner:
+                # Loser cancellation is what frees slots AND blocks.
+                self.replicas[r].engine.cancel(rid)
+            self.router.release(r)
+        dense = np.zeros(self.router.n_replicas)
+        dense[winner] = elapsed
+        # Winner observed; losers censored at the winner's elapsed time.
+        self.router.record(
+            dense, participants, observed=[winner], censor_level=elapsed
+        )
+        fr.tokens = fr.tokens + list(req.tokens)
+        fr.t_done = rep.now
+        fr.winner = winner
+        fr.copies, fr.t0 = {}, {}
+        self.inflight.pop(fr.gid, None)
+        self.results[fr.gid] = fr
+
+    def _copy_expired(self, fr: FrontendRequest, r: int) -> None:
+        rep = self.replicas[r]
+        req = rep.engine.request(fr.copies[r])
+        if len(req.tokens) > len(fr.partial):
+            fr.partial = list(req.tokens)
+        del fr.copies[r]
+        fr.t0.pop(r, None)
+        self.router.release(r)
+        # All the expiry teaches us: this replica was slower than the
+        # deadline budget on this request.
+        self.router.record(
+            np.zeros(self.router.n_replicas), [r],
+            observed=[], censor_level=self.deadline,
+        )
+        if not fr.copies:
+            self._requeue(fr)
+
+    # -- driver --------------------------------------------------------------
+    def _step_target(self) -> Optional[Replica]:
+        cands = [rep for rep in self.replicas if rep.alive and rep.has_work]
+        if not cands:
+            return None
+        return min(cands, key=lambda rep: (rep.now, rep.id))
+
+    def run(self) -> Dict[int, FrontendRequest]:
+        """Drive the fleet until every request completes or drops.
+        Deterministic: one engine action per iteration, always on the
+        alive replica furthest behind in virtual time (ties to lowest
+        id); chaos events fire between actions at their scheduled
+        step."""
+        while self.queue or self.inflight:
+            for ev in self.schedule.pop(self.ticks, []):
+                self._apply(ev)
+            self._dispatch()
+            rep = self._step_target()
+            if rep is None:
+                future = [s for s in self.schedule if s > self.ticks]
+                if future:
+                    # Whole fleet down/idle: jump to the next chaos event
+                    # (e.g. a rejoin) instead of spinning.
+                    self.ticks = min(future)
+                    continue
+                if self.queue or self.inflight:
+                    raise RuntimeError(
+                        "frontend stranded: requests pending but no live "
+                        "replica has capacity and no future fault events"
+                    )
+                break
+            rep.step()
+            self.ticks += 1
+            self._harvest(rep)
+        return dict(self.results)
+
+    # -- reporting -----------------------------------------------------------
+    def summary(self) -> Dict[str, float]:
+        lats = [fr.latency for fr in self.results.values() if fr.done]
+        eng = [rep.engine.stats for rep in self.replicas]
+        return {
+            "completed": sum(fr.done for fr in self.results.values()),
+            "dropped": len(self.dropped),
+            "retries": sum(fr.retries for fr in self.results.values()),
+            "migrations": self.migrations,
+            "cancelled_copies": sum(s.cancelled_requests for s in eng),
+            "generated_tokens": sum(s.generated_tokens for s in eng),
+            "p50_latency": float(np.percentile(lats, 50)) if lats else np.nan,
+            "p99_latency": float(np.percentile(lats, 99)) if lats else np.nan,
+        }

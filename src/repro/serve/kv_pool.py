@@ -40,9 +40,10 @@ Invariants (tested in tests/test_serve.py):
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 import math
-from typing import Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -52,6 +53,7 @@ from repro.models.attention import NULL_BLOCK, round_kv_len
 from repro.models.layers import (
     DTYPES,
     ParamSpec,
+    batch_axis_of,
     is_paged_spec,
     slot_read,
     slot_reset,
@@ -59,7 +61,28 @@ from repro.models.layers import (
     slot_write,
 )
 
-__all__ = ["BlockManager", "SlotPool", "model_scoped_cache"]
+__all__ = ["BlockManager", "SlotPool", "SlotSnapshot", "model_scoped_cache"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SlotSnapshot:
+    """One slot's cache state, detached from any pool — the unit of
+    in-flight request migration between replicas.
+
+    ``data`` mirrors the pool's spec tree: contiguous leaves (recurrent
+    lanes, or KV rows of an unpaged pool) are batch-1 slices; paged
+    leaves are the slot's OWNED ARENA BLOCKS gathered block-major along
+    the ``kv_blocks`` axis (shape ``n_blocks`` on that axis — only the
+    rows the slot actually wrote travel, not the whole arena). Restoring
+    into another pool of the same geometry scatters those blocks into
+    freshly allocated destination blocks: a block-table handoff, not a
+    recompute."""
+
+    data: Any                 # pytree matching the pool's spec tree
+    position: int             # next cache write index of the slot
+    n_blocks: int             # owned arena blocks captured (0 = unpaged)
+    block_size: Optional[int]
+    rows: int                 # per-slot row capacity (geometry check)
 
 
 def model_scoped_cache(fn):
@@ -403,6 +426,97 @@ class SlotPool:
         Paged leaves are untouched — stale blocks are recycled lazily."""
         self.caches = self._reset(self.caches, jnp.int32(slot))
         self.positions[slot] = 0
+
+    # -- migration (KV block handoff) ----------------------------------------
+    def snapshot_slot(self, slot: int) -> SlotSnapshot:
+        """Capture one active slot as a :class:`SlotSnapshot`: contiguous
+        leaves slice out batch-1, paged leaves gather exactly the slot's
+        owned blocks from the arena. The slot itself is untouched (the
+        caller frees it after a successful handoff)."""
+        if not self.active[slot]:
+            raise ValueError(f"slot {slot} is not active")
+        if self.paged:
+            owned = list(self.manager._owned[slot])
+            ids = jnp.asarray(owned, jnp.int32)
+        else:
+            owned, ids = [], None
+
+        def snap(c, s):
+            if is_paged_spec(s):
+                return jnp.take(c, ids, axis=s.axes.index("kv_blocks"))
+            return jax.lax.dynamic_slice_in_dim(
+                c, slot, 1, axis=batch_axis_of(s)
+            )
+
+        data = jax.tree.map(
+            snap, self.caches, self.specs,
+            is_leaf=lambda x: isinstance(x, ParamSpec),
+        )
+        return SlotSnapshot(
+            data=data,
+            position=int(self.positions[slot]),
+            n_blocks=len(owned),
+            block_size=self.block_size,
+            rows=self.rows,
+        )
+
+    def restore_slot(
+        self, snap: SlotSnapshot, owner: Optional[int] = None,
+        n_tokens: Optional[int] = None,
+    ) -> Optional[int]:
+        """Re-admit a migrated slot: allocate a slot (committing the
+        request's remaining lifetime budget ``n_tokens``, paged pools),
+        append destination blocks to cover the snapshot's rows, and
+        scatter the snapshot's block contents into them; contiguous
+        leaves write back with the usual batch-1 slice. Returns the slot
+        index, or None when this pool cannot admit the request right now
+        (no free slot / arena over-committed) — the caller requeues."""
+        if snap.block_size != self.block_size or snap.rows != self.rows:
+            raise ValueError(
+                f"snapshot geometry (block_size={snap.block_size}, "
+                f"rows={snap.rows}) does not match pool "
+                f"(block_size={self.block_size}, rows={self.rows})"
+            )
+        budget = snap.position if n_tokens is None else int(n_tokens)
+        if budget < snap.position:
+            raise ValueError(
+                f"budget {budget} tokens below snapshot position "
+                f"{snap.position}"
+            )
+        if self.paged and self.manager.blocks_for(budget) < snap.n_blocks:
+            raise ValueError(
+                f"budget {budget} tokens ({self.manager.blocks_for(budget)} "
+                f"blocks) cannot hold the snapshot's {snap.n_blocks} blocks"
+            )
+        slot = self.allocate(owner=owner, n_tokens=budget)
+        if slot is None:
+            return None
+        if self.paged and snap.n_blocks:
+            self.manager.append(slot, snap.n_blocks * self.block_size)
+            dest_ids = jnp.asarray(
+                self.manager._owned[slot][: snap.n_blocks], jnp.int32
+            )
+        else:
+            dest_ids = None
+
+        def rest(c, s, v):
+            if is_paged_spec(s):
+                if snap.n_blocks == 0:
+                    return c
+                ax = s.axes.index("kv_blocks")
+                m = jnp.moveaxis(c, ax, 0)
+                m = m.at[dest_ids].set(jnp.moveaxis(v, ax, 0).astype(m.dtype))
+                return jnp.moveaxis(m, 0, ax)
+            return jax.lax.dynamic_update_slice_in_dim(
+                c, v.astype(c.dtype), slot, axis=batch_axis_of(s)
+            )
+
+        self.caches = jax.tree.map(
+            rest, self.caches, self.specs, snap.data,
+            is_leaf=lambda x: isinstance(x, ParamSpec),
+        )
+        self.positions[slot] = snap.position
+        return slot
 
     def defrag(self) -> Dict[int, int]:
         """Compact active slots to the lowest indices (one gather over

@@ -1,0 +1,133 @@
+"""One fleet member: a ServeEngine plus the fault surface chaos drives.
+
+A replica is an independent ``ServeEngine`` (own scheduler, own virtual
+clock, own slot pool / paged arena) wearing the same fault model the
+training runtime's straggler simulator applies to workers: it can FAIL
+(drop out of the fleet, losing every in-flight request), run SLOW (every
+engine action's virtual cost scales by a factor — a degraded node, not a
+dead one), and REJOIN (come back empty and healthy at the fleet's
+current time frontier). The frontend injects these from the shared
+``repro.runtime.faults.FaultEvent`` schedule and reacts only to what it
+can observe — completions stop arriving, response times inflate — never
+to the schedule itself (same oracle-free discipline as the training
+loop's elastic failover).
+
+Public API contract: a replica owns TIME and LIVENESS, nothing about
+requests — submission, hedging, retry, and migration policy live in
+``serve.frontend``. ``fail()`` tears down local state and returns the
+cancelled requests so the frontend can harvest their partial streams
+(greedy decode is deterministic, so every copy's partial output is a
+prefix of the same stream and the longest one seeds the retry).
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional
+
+from .engine import ServeEngine
+from .scheduler import CostModel, EventClock, Request, Scheduler
+
+__all__ = ["FaultyClock", "Replica"]
+
+
+class FaultyClock(EventClock):
+    """EventClock whose compute actions cost ``slow`` times the model's
+    price (1.0 = nominal). Only COMPUTE advances scale — ``advance_to``
+    (idle jump to an arrival / rejoin frontier) moves wall position, not
+    work, so it stays unscaled."""
+
+    def __init__(self, cost: Optional[CostModel] = None):
+        super().__init__(cost)
+        self.slow = 1.0
+
+    def advance_prefill(self, n_tokens: int) -> None:
+        self.now += self.cost.prefill(n_tokens) * self.slow
+
+    def advance_decode(self) -> None:
+        self.now += self.cost.decode() * self.slow
+
+    def advance_draft_prefill(self, n_tokens: int) -> None:
+        self.now += self.cost.draft_prefill(n_tokens) * self.slow
+
+    def advance_spec_round(
+        self, draft_ticks: int, verify_tokens: int, replay: bool = False
+    ) -> None:
+        self.now += self.cost.spec_round(draft_ticks, verify_tokens, replay) * self.slow
+
+
+class Replica:
+    """An engine + id + liveness. Builds its own ``FaultyClock`` and
+    ``Scheduler`` so fleet members never share mutable state."""
+
+    def __init__(
+        self,
+        replica_id: int,
+        model,
+        params,
+        *,
+        n_slots: int,
+        max_len: int,
+        cost: Optional[CostModel] = None,
+        block_size: Optional[int] = None,
+        arena_blocks: Optional[int] = None,
+        prefill_chunk: Optional[int] = None,
+        decode_per_prefill: int = 4,
+        prefill_bucket: int = 16,
+    ):
+        self.id = int(replica_id)
+        self.clock = FaultyClock(cost)
+        sched = Scheduler(
+            n_slots,
+            prefill_chunk=prefill_chunk,
+            decode_per_prefill=decode_per_prefill,
+            clock=self.clock,
+        )
+        self.engine = ServeEngine(
+            model, params,
+            n_slots=n_slots, max_len=max_len, scheduler=sched,
+            prefill_bucket=prefill_bucket,
+            block_size=block_size, arena_blocks=arena_blocks,
+        )
+        self.alive = True
+
+    @property
+    def now(self) -> float:
+        return self.clock.now
+
+    @property
+    def has_work(self) -> bool:
+        return self.engine.has_work
+
+    def step(self) -> str:
+        if not self.alive:
+            raise RuntimeError(f"replica {self.id} is down")
+        return self.engine.step()
+
+    # -- fault surface -------------------------------------------------------
+    def set_slow(self, factor: float) -> None:
+        """Degrade (or restore, factor=1.0) this replica's speed."""
+        if factor <= 0:
+            raise ValueError("slow factor must be > 0")
+        self.clock.slow = float(factor)
+
+    def fail(self) -> List[Request]:
+        """Hard failure: every in-flight request dies with the node.
+        Local slots and blocks are torn down (the engine survives to be
+        rejoined later — a process restart with warm weights). Returns
+        the cancelled requests, partial token streams intact, so the
+        caller can requeue from the longest prefix."""
+        self.alive = False
+        eng = self.engine
+        out = []
+        for rid in eng.live_rids():
+            req = eng.request(rid)
+            eng.cancel(rid, reason="cancelled")
+            out.append(req)
+        return out
+
+    def rejoin(self, now: float) -> None:
+        """Come back empty, healthy, and AT THE FLEET'S TIME FRONTIER —
+        a rejoining node does not get to serve from the past."""
+        self.alive = True
+        self.clock.slow = 1.0
+        self.clock.advance_to(now)

@@ -93,6 +93,7 @@ class HedgedRouter:
         n_max: Optional[int] = None,
         ewma_alpha: float = 0.1,
         warmup: int = 8,
+        slow_cap: float = 1e6,
     ):
         if not (1 <= quorum <= n_replicas):
             raise ValueError("need 1 <= quorum <= n_replicas")
@@ -104,19 +105,62 @@ class HedgedRouter:
         self.n_max = n_max or n_replicas
         self.tracker = StragglerTracker(n_replicas, alpha=ewma_alpha, warmup=warmup)
         self.inflight = np.zeros(n_replicas, np.int64)
+        self.alive = np.ones(n_replicas, bool)
+        #: finite stand-in for an unbounded censored estimate (a replica
+        #: whose every interaction timed out): priced effectively last,
+        #: but a later successful observation can still pull it back.
+        self.slow_cap = slow_cap
+
+    # -- fleet membership ----------------------------------------------------
+    @property
+    def n_alive(self) -> int:
+        return int(self.alive.sum())
+
+    def mark_failed(self, r: int) -> None:
+        """Take a replica out of the fleet: it stops being a dispatch
+        target and the quorum degrades to the shrunken fleet (pricing
+        re-runs over whoever is left instead of stalling)."""
+        self.alive[r] = False
+
+    def mark_joined(self, r: int) -> None:
+        """A replica (re)joins healthy. Its telemetry history is RESET:
+        stale pre-failure estimates must not price it (a replica that
+        was slow before dying may come back healthy — and one that was
+        fast may come back cold). With zero rounds it is priced at the
+        neutral prior 1.0 and, thanks to the tracker's per-worker
+        first-observation seeding, its first real response time lands as
+        its estimate directly — it is never read as infinitely fast while
+        an EWMA crawls up from zero (the training-side PR 6 bug, mirrored
+        here)."""
+        self.alive[r] = True
+        self.tracker.reset_worker(r)
 
     # -- pricing -------------------------------------------------------------
     def _slowdowns(self) -> np.ndarray:
-        """Per-replica slowdown estimates (1.0 until telemetry warms up)."""
+        """Per-replica slowdown estimates.
+
+        Fleet-wide cold start prices everyone at 1.0 until ``warmup``
+        rounds of telemetry exist. Past that, each replica is priced from
+        its OWN state: a finite censoring-corrected estimate where one
+        exists; the neutral prior 1.0 for a replica with no history yet
+        (fresh or just rejoined — per-worker seeding means its first
+        observation will replace the prior wholesale); and ``slow_cap``
+        for a replica whose history is all censoring (every interaction
+        expired — only lower bounds known, so it prices last)."""
         if int(self.tracker.rounds.max(initial=0)) < self.tracker.warmup:
             return np.ones(self.n_replicas)
         s = self.tracker.slowdown()
-        return np.where(np.isfinite(s) & (s > 0), s, 1.0)
+        out = np.ones(self.n_replicas)
+        seen = np.isfinite(s) & (s > 0)
+        out[seen] = s[seen]
+        unbounded = (self.tracker.rounds > 0) & (self.tracker.wins == 0)
+        out[unbounded] = self.slow_cap
+        return out
 
     def available(self) -> List[int]:
         return [
             r for r in range(self.n_replicas)
-            if self.inflight[r] < self.slots_per_replica
+            if self.alive[r] and self.inflight[r] < self.slots_per_replica
         ]
 
     def hedge_cost(self, n: int, beta: float = 1.0, scale: float = 1.0) -> float:
@@ -127,13 +171,21 @@ class HedgedRouter:
 
     def choose_hedge(self, beta: float = 1.0) -> Optional[HedgePlan]:
         """Brute-force minimization of ``hedge_cost`` over feasible
-        fan-outs, on the fastest-estimated available replicas."""
+        fan-outs, on the fastest-estimated available replicas.
+
+        Degraded fleets re-price rather than stall: the required quorum
+        is clamped to the number of ALIVE replicas, so losing replicas
+        shrinks k (and the feasible fan-outs) instead of wedging the
+        frontend. Busy-but-alive replicas still gate normally — a full
+        fleet with too few free slots returns None and the caller
+        retries after completions free capacity."""
         slow = self._slowdowns()
         avail = sorted(self.available(), key=lambda r: (slow[r], r))
-        if len(avail) < self.quorum:
+        k_cap = min(self.quorum, max(self.n_alive, 1))
+        if len(avail) < k_cap:
             return None
         best: Optional[HedgePlan] = None
-        for n in range(self.quorum, min(len(avail), self.n_max) + 1):
+        for n in range(k_cap, min(len(avail), self.n_max) + 1):
             subset = avail[:n]
             scale = float(np.mean(slow[subset]))
             k = min(self.quorum, n)
@@ -144,6 +196,56 @@ class HedgedRouter:
         return best
 
     # -- dispatch lifecycle --------------------------------------------------
+    def begin(self, plan: HedgePlan) -> None:
+        """Occupy one slot on each replica of a chosen plan. The caller
+        owns releasing them — via ``complete(outcome)`` once the hedge
+        resolves, or ``release(r)`` one at a time (e.g. a replica dies
+        mid-request and its copy is torn down before any outcome
+        exists)."""
+        for r in plan.replicas:
+            self.inflight[r] += 1
+
+    def release(self, r: int) -> None:
+        """Release a single replica's slot (early loser cancellation or
+        replica death — cases where no ``DispatchOutcome`` applies)."""
+        if self.inflight[r] <= 0:
+            raise ValueError(f"replica {r} has no in-flight work")
+        self.inflight[r] -= 1
+
+    def occupy(self, r: int) -> None:
+        """Occupy a single replica's slot outside a plan (a migrated
+        request landing on a new replica)."""
+        self.inflight[r] += 1
+
+    def record(
+        self,
+        times: np.ndarray,
+        participants: Sequence[int],
+        observed: Optional[Sequence[int]] = None,
+        censor_level: Optional[float] = None,
+    ) -> None:
+        """Feed one hedge's resolution to the tracker.
+
+        ``times`` is dense over the fleet; only ``participants`` (the
+        replicas this hedge actually touched) are eligible — censoring a
+        loser must not count a round against replicas that never saw the
+        request. With ``censor_level`` set, participants NOT in
+        ``observed`` are recorded as censored at that level (the hedged
+        losers: all we learn is "slower than the winner"/"slower than
+        the deadline")."""
+        part = np.zeros(self.n_replicas, bool)
+        part[list(participants)] = True
+        if censor_level is None:
+            self.tracker.observe(np.asarray(times, np.float64), part)
+        else:
+            obs_mask = np.zeros(self.n_replicas, bool)
+            if observed is not None:
+                obs_mask[list(observed)] = True
+            self.tracker.observe(
+                np.asarray(times, np.float64), part,
+                observed=obs_mask, censor_level=censor_level,
+            )
+
     def dispatch(
         self,
         replica_set: ReplicaSet,
@@ -159,7 +261,7 @@ class HedgedRouter:
             return None
         replicas = np.asarray(plan.replicas, int)
         times = replica_set.sample(replicas, beta)
-        self.inflight[replicas] += 1
+        self.begin(plan)
         order = np.argsort(times, kind="stable")
         completed = tuple(int(r) for r in replicas[order[: plan.k]])
         cancelled = tuple(int(r) for r in replicas[order[plan.k :]])
@@ -168,11 +270,9 @@ class HedgedRouter:
         )
         # Telemetry sees only the responses that actually arrived —
         # cancelled losers are censored, never observed.
-        obs = np.zeros(self.n_replicas)
-        alive = np.zeros(self.n_replicas, bool)
-        obs[list(completed)] = times[order[: plan.k]]
-        alive[list(completed)] = True
-        self.tracker.observe(obs, alive)
+        dense = np.zeros(self.n_replicas)
+        dense[list(completed)] = times[order[: plan.k]]
+        self.record(dense, completed)
         if auto_complete:
             self.complete(outcome)
         return outcome

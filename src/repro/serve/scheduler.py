@@ -51,16 +51,29 @@ class Request:
     prompt: np.ndarray            # (P,) int32
     max_new_tokens: int
     arrival: float = 0.0
+    #: absolute virtual-time deadline (None = no deadline). Set by the
+    #: caller at submit, or stamped by the scheduler at admission when it
+    #: was built with ``deadline_ticks``. An unfinished request past its
+    #: deadline is cancelled: slot and blocks freed, the partial output
+    #: kept, and the expiry surfaced as censored telemetry (all the
+    #: router learns is "slower than the deadline").
+    deadline: Optional[float] = None
     # -- filled by the engine ------------------------------------------------
     tokens: List[int] = dataclasses.field(default_factory=list)
     t_admit: Optional[float] = None
     t_first_token: Optional[float] = None
     t_done: Optional[float] = None
+    t_cancelled: Optional[float] = None
+    cancel_reason: Optional[str] = None   # "deadline" | "cancelled" | "migrated"
     prefilled: int = 0            # prompt tokens already in cache (chunked)
 
     @property
     def prompt_len(self) -> int:
         return int(self.prompt.shape[0])
+
+    @property
+    def cancelled(self) -> bool:
+        return self.t_cancelled is not None
 
     @property
     def latency(self) -> float:
@@ -151,11 +164,17 @@ class Scheduler:
         prefill_chunk: Optional[int] = None,
         decode_per_prefill: int = 4,
         clock: Optional[EventClock] = None,
+        deadline_ticks: Optional[int] = None,
     ):
+        """``deadline_ticks``: default per-request deadline, in decode-tick
+        units of the clock's cost model, stamped at ADMISSION (queueing
+        time does not count against it). Requests submitted with an
+        explicit absolute ``Request.deadline`` keep it."""
         self.n_slots = n_slots
         self.prefill_chunk = prefill_chunk
         self.decode_per_prefill = max(int(decode_per_prefill), 0)
         self.clock = clock or EventClock()
+        self.deadline_ticks = deadline_ticks
         self.waiting: List[Request] = []
         self.running: List[Request] = []   # admitted, mid-prefill (chunked)
         self._decode_debt = 0              # decode ticks owed before next prefill
@@ -227,6 +246,19 @@ class Scheduler:
         self.waiting.remove(req)
         self.running.append(req)
         req.t_admit = self.clock.now
+        if req.deadline is None and self.deadline_ticks is not None:
+            req.deadline = (
+                self.clock.now + self.deadline_ticks * self.clock.cost.decode_tick
+            )
+
+    def drop(self, req: Request) -> None:
+        """Forget a cancelled request wherever it sits in the queues
+        (waiting or mid-prefill running; a decoding request is in
+        neither — its slot is the engine's to free)."""
+        if req in self.waiting:
+            self.waiting.remove(req)
+        if req in self.running:
+            self.running.remove(req)
 
     def on_prefill_chunk(self, req: Request, n_tokens: int, done: bool) -> None:
         req.prefilled += n_tokens

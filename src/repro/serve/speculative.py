@@ -229,7 +229,14 @@ class SpecController:
         """Joint (gamma, n_h) brute force with the verify latency priced
         by ``expected_kth`` — see ``hedged_round_cost``. This is the
         composition seam with ``HedgedRouter``: pass the router's delay
-        model and EWMA ``slowdown`` for the replica subset."""
+        model and EWMA ``slowdown`` for the replica subset.
+
+        Degraded fleets: pass the LIVE replica count as ``n_max`` (e.g.
+        ``router.n_alive``) and the pricing re-runs over the shrunken
+        fan-out range instead of assuming dead verifiers; a fleet
+        smaller than the quorum clamps the quorum rather than stalling
+        (same contract as ``HedgedRouter.choose_hedge``)."""
+        quorum = min(quorum, max(n_max, 1))
         p = self.p_effective
         best: Optional[GammaPlan] = None
         for gamma in range(self.gamma_max + 1):

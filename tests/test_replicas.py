@@ -1,0 +1,364 @@
+"""Multi-replica serving plane: chaos failover, deadlines, cancellation
+that actually frees memory, and in-flight KV migration.
+
+Pinned contracts (docs/serving.md "Failure semantics"):
+
+* ``FaultEvent`` is one shared schema for both planes
+  (``repro.runtime.faults``), still importable from its old home.
+* Hedged-loser cancellation releases engine slots AND paged arena
+  blocks — a queued request admits the moment a loser is cancelled.
+* Deadlines are stamped at admission, police every step, and free what
+  the expired request held; the expiry is censored telemetry.
+* A rejoining replica is priced at the neutral prior, and its first
+  real observation seeds its estimate directly (no crawl-up from zero).
+* Quorum degrades with the ALIVE fleet (re-price, don't stall) while a
+  fully-alive-but-busy fleet still stalls (capacity is not liveness).
+* Migration moves a decoding request's cache state between engines with
+  byte-identical greedy continuation — for every registered family, in
+  both contiguous and paged layouts.
+* The full chaos loop (kill / drain / rejoin under load) completes every
+  request with streams byte-identical to a fault-free run.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.delay_models import SimplifiedDelayModel
+from repro.models import build_model
+from repro.runtime.faults import FaultEvent, schedule_by_step
+from repro.serve import (
+    Frontend,
+    HedgedRouter,
+    Replica,
+    Scheduler,
+    ServeEngine,
+    generate_offline,
+)
+
+RNG = jax.random.PRNGKey(0)
+MAX_LEN = 64
+DELAY = SimplifiedDelayModel(lambda_y=2.0)
+
+
+def _model(arch):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    return model, model.init(RNG)
+
+
+def _prompts(vocab, n=8, seed=1):
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n):
+        p = int(rng.integers(4, 16))
+        m = int(rng.integers(6, 14))
+        out.append((rng.integers(0, vocab, size=p).astype(np.int32), m, i * 0.002))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Shared FaultEvent schema
+# ---------------------------------------------------------------------------
+
+def test_fault_event_shared_schema():
+    """The chaos schema lives in runtime.faults and is re-exported from
+    its original home (train_loop) — one schema, both planes."""
+    from repro.runtime import train_loop
+
+    assert train_loop.FaultEvent is FaultEvent
+    ev = [FaultEvent(step=3, kind="fail", worker=1),
+          FaultEvent(step=3, kind="slow", worker=0, factor=2.0)]
+    sched = schedule_by_step(ev)
+    assert sched == {3: ev} and train_loop.schedule_by_step(ev) == {3: ev}
+    with pytest.raises(ValueError):
+        FaultEvent(step=0, kind="explode", worker=0)
+
+
+# ---------------------------------------------------------------------------
+# Router: degraded fleets + rejoin cold start
+# ---------------------------------------------------------------------------
+
+def test_router_degraded_fleet_reprices_quorum():
+    """Losing replicas clamps the quorum to the live fleet instead of
+    stalling; a fully-alive-but-busy fleet still returns None (capacity
+    pressure is resolved by completions, not by lowering k)."""
+    router = HedgedRouter(DELAY, 4, quorum=3, cost_per_replica=0.05)
+    plan = router.choose_hedge()
+    assert plan is not None and plan.k == 3
+
+    router.mark_failed(2)
+    router.mark_failed(3)
+    plan = router.choose_hedge()
+    assert plan is not None and plan.k == 2          # re-priced, not stalled
+    assert set(plan.replicas) <= {0, 1}
+
+    # Busy != dead: occupy one of the two live replicas; now the live
+    # quorum (2) exceeds availability (1) -> stall until a completion.
+    router.inflight[0] = router.slots_per_replica
+    assert router.choose_hedge() is None
+
+
+def test_router_rejoin_cold_start_seeding():
+    """mark_joined resets history: the rejoined replica prices at the
+    neutral prior (not its stale pre-failure estimate), and its first
+    real observation seeds the tracker estimate directly instead of
+    EWMA-crawling up from zero (PR 6's training-side fix, mirrored)."""
+    router = HedgedRouter(DELAY, 3, warmup=1)
+    # Replica 2 builds a slow history: always observed at 8x.
+    for _ in range(12):
+        t = np.array([1.0, 1.0, 8.0])
+        router.record(t, participants=[0, 1, 2])
+    assert router._slowdowns()[2] > 4.0
+
+    router.mark_failed(2)
+    assert router.available() == [0, 1]
+    router.mark_joined(2)
+    assert router.available() == [0, 1, 2]
+    # History gone: neutral prior, back in the dispatch order.
+    assert router._slowdowns()[2] == pytest.approx(1.0)
+
+    # First post-rejoin observation seeds directly at the observed value.
+    router.record(np.array([0.0, 0.0, 2.5]), participants=[2])
+    assert router.tracker.mean_estimate()[2] == pytest.approx(2.5)
+
+
+def test_router_unbounded_censored_estimate_prices_last():
+    """A replica whose every interaction was censored (all deadline
+    expiries, zero real observations) has only lower bounds — it must
+    price LAST, not at the neutral prior, yet stay finite so later real
+    observations can recover it."""
+    router = HedgedRouter(DELAY, 3, warmup=1)
+    for _ in range(4):
+        router.record(np.array([1.0, 1.0, 0.0]), participants=[0, 1])
+        router.record(np.zeros(3), [2], observed=[], censor_level=3.0)
+    slow = router._slowdowns()
+    assert np.isfinite(slow).all()
+    assert slow[2] == router.slow_cap > slow[0]
+    plan = router.choose_hedge()
+    assert plan is not None and 2 not in plan.replicas[: 2]
+
+
+def test_router_release_occupy_roundtrip():
+    router = HedgedRouter(DELAY, 2, slots_per_replica=2)
+    plan = router.choose_hedge()
+    router.begin(plan)
+    before = router.inflight.copy()
+    router.occupy(1)
+    router.release(1)
+    assert (router.inflight == before).all()
+    with pytest.raises(ValueError):
+        for _ in range(10):
+            router.release(0)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler + engine: deadlines and cancellation that frees memory
+# ---------------------------------------------------------------------------
+
+def test_deadline_stamped_at_admission_and_expires():
+    """deadline_ticks stamps at ADMISSION (queueing doesn't count),
+    expiry cancels with reason "deadline", and everything the request
+    held — slot and paged blocks — is free afterwards."""
+    model, params = _model("smollm-135m")
+    sched = Scheduler(2, deadline_ticks=3)
+    eng = ServeEngine(model, params, n_slots=2, max_len=MAX_LEN,
+                      scheduler=sched, block_size=8)
+    rng = np.random.default_rng(0)
+    rid = eng.submit(rng.integers(0, model.cfg.vocab_size, 8).astype(np.int32), 30)
+    out = eng.run()
+    req = out[rid]
+    assert req.cancelled and req.cancel_reason == "deadline"
+    assert req.deadline == pytest.approx(
+        req.t_admit + 3 * sched.clock.cost.decode_tick
+    )
+    assert 0 < len(req.tokens) < 30          # partial stream kept
+    assert eng.pool.n_active == 0
+    mgr = eng.pool.manager
+    assert mgr.n_free_blocks == mgr.num_blocks
+    assert eng.stats.cancelled_requests == 1
+
+
+def test_cancel_releases_paged_blocks_under_pressure():
+    """The tentpole's memory contract: cancelling a request under arena
+    pressure returns its blocks, which is exactly what lets the queued
+    request admit. (Before this PR cancellation was telemetry-only.)"""
+    model, params = _model("smollm-135m")
+    eng = ServeEngine(model, params, n_slots=2, max_len=MAX_LEN,
+                      block_size=8, arena_blocks=8)
+    rng = np.random.default_rng(0)
+    p = lambda n: rng.integers(0, model.cfg.vocab_size, n).astype(np.int32)
+    r1 = eng.submit(p(20), 30)               # budget 50 -> 7 of 8 blocks
+    r2 = eng.submit(p(20), 30)               # cannot admit alongside r1
+    for _ in range(6):
+        eng.step()
+    assert eng.request(r2).t_admit is None   # starved by the arena
+    free_before = eng.pool.manager.n_free_blocks
+    assert eng.cancel(r1)
+    assert eng.pool.manager.n_free_blocks > free_before
+    out = eng.run()
+    assert out[r2].t_done is not None        # cancel unblocked admission
+    assert out[r1].cancelled and out[r1].cancel_reason == "cancelled"
+    assert not eng.cancel(r1)                # idempotent: already cancelled
+
+
+# ---------------------------------------------------------------------------
+# Migration byte-identity: every family, both layouts
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize(
+    "arch", ["smollm-135m", "deepseek-v3", "xlstm-125m", "zamba2"]
+)
+@pytest.mark.parametrize("paged", [False, True], ids=["contig", "paged"])
+def test_migration_byte_identity(arch, paged):
+    """Export a mid-decode request from one engine, import into another,
+    finish there: the stitched greedy stream must equal offline decode
+    exactly — the block handoff moves state, never math. Covers KV
+    (smollm), MLA latent (deepseek), recurrent lanes (xlstm), and the
+    hybrid layers-axis layout (zamba), contiguous and paged."""
+    model, params = _model(arch)
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, model.cfg.vocab_size, 12).astype(np.int32)
+    ref = generate_offline(model, params, prompt, 10, MAX_LEN)
+
+    kw = dict(block_size=8) if paged else {}
+    src = ServeEngine(model, params, n_slots=2, max_len=MAX_LEN, **kw)
+    dst = ServeEngine(model, params, n_slots=2, max_len=MAX_LEN, **kw)
+    rid = src.submit(prompt, 10)
+    while len(src.request(rid).tokens) < 4:
+        src.step()
+    ticket = src.export_request(rid)
+    assert src.request(rid).cancel_reason == "migrated"
+    assert src.pool.n_active == 0            # source fully released
+    if paged:
+        mgr = src.pool.manager
+        assert mgr.n_free_blocks == mgr.num_blocks
+    new_rid = dst.import_request(ticket)
+    assert new_rid is not None
+    out = dst.run()
+    assert out[new_rid].tokens == ref        # byte-identical, no re-prefill
+    assert dst.stats.migrated_in == 1 and src.stats.migrated_out == 1
+
+
+def test_migration_backpressure_returns_none():
+    """import_request under a full pool returns None (caller requeues)
+    instead of corrupting state; after capacity frees it succeeds."""
+    model, params = _model("smollm-135m")
+    rng = np.random.default_rng(0)
+    p = lambda n: rng.integers(0, model.cfg.vocab_size, n).astype(np.int32)
+    src = ServeEngine(model, params, n_slots=1, max_len=MAX_LEN, block_size=8)
+    dst = ServeEngine(model, params, n_slots=1, max_len=MAX_LEN, block_size=8)
+    blocker = dst.submit(p(8), 20)
+    while not dst.request(blocker).tokens:
+        dst.step()
+    rid = src.submit(p(8), 10)
+    while len(src.request(rid).tokens) < 3:
+        src.step()
+    ticket = src.export_request(rid)
+    assert dst.import_request(ticket) is None   # pool full -> requeue
+    dst.cancel(blocker)
+    assert dst.import_request(ticket) is not None
+
+
+# ---------------------------------------------------------------------------
+# Frontend: hedging with real loser teardown, chaos zero-drop identity
+# ---------------------------------------------------------------------------
+
+def _fleet(model, params, n=3, n_slots=2):
+    return [
+        Replica(i, model, params, n_slots=n_slots, max_len=MAX_LEN,
+                block_size=8)
+        for i in range(n)
+    ]
+
+
+def test_frontend_fault_free_matches_offline():
+    model, params = _model("smollm-135m")
+    reqs = _prompts(model.cfg.vocab_size)
+    refs = [generate_offline(model, params, p, m, MAX_LEN) for p, m, _ in reqs]
+    fe = Frontend(_fleet(model, params), DELAY, cost_per_replica=0.001)
+    gids = [fe.submit(p, m, arrival=a) for p, m, a in reqs]
+    out = fe.run()
+    assert all(out[g].done and not out[g].dropped for g in gids)
+    assert [out[g].tokens for g in gids] == refs
+    # Hedged losers were actually torn down, not leaked: every pool is
+    # empty and every paged arena fully free at drain.
+    for rep in fe.replicas:
+        assert rep.engine.pool.n_active == 0
+        mgr = rep.engine.pool.manager
+        assert mgr.n_free_blocks == mgr.num_blocks
+    assert (fe.router.inflight == 0).all()
+
+
+def test_frontend_chaos_kill_rejoin_zero_drop():
+    """Kill 1 of 3 replicas mid-saturation, rejoin later: every request
+    completes, none drop, and all streams are byte-identical to the
+    fault-free run (the acceptance gate of this PR)."""
+    model, params = _model("smollm-135m")
+    reqs = _prompts(model.cfg.vocab_size)
+    refs = [generate_offline(model, params, p, m, MAX_LEN) for p, m, _ in reqs]
+    events = [FaultEvent(step=12, kind="fail", worker=1),
+              FaultEvent(step=60, kind="rejoin", worker=1)]
+    fe = Frontend(_fleet(model, params), DELAY, cost_per_replica=0.001,
+                  events=events)
+    gids = [fe.submit(p, m, arrival=a) for p, m, a in reqs]
+    out = fe.run()
+    assert all(out[g].done and not out[g].dropped for g in gids)
+    assert [out[g].tokens for g in gids] == refs
+    assert not fe.replicas[1].alive or fe.replicas[1].engine.pool.n_active == 0
+
+
+def test_frontend_drain_migrates_in_flight():
+    """Graceful decommission under single-copy dispatch (replica cost
+    high enough that hedging never covers a request twice): decoding
+    requests MUST move via KV handoff, and streams stay identical."""
+    model, params = _model("smollm-135m")
+    reqs = _prompts(model.cfg.vocab_size)
+    refs = [generate_offline(model, params, p, m, MAX_LEN) for p, m, _ in reqs]
+    events = [FaultEvent(step=20, kind="drain", worker=0),
+              FaultEvent(step=90, kind="rejoin", worker=0)]
+    fe = Frontend(_fleet(model, params), DELAY, cost_per_replica=10.0,
+                  events=events)
+    gids = [fe.submit(p, m, arrival=a) for p, m, a in reqs]
+    out = fe.run()
+    assert all(out[g].done and not out[g].dropped for g in gids)
+    assert [out[g].tokens for g in gids] == refs
+    assert fe.migrations > 0                 # real block handoffs happened
+
+
+def test_frontend_deadline_retry_requeues_elsewhere():
+    """A 40x-slowed replica with a tight per-attempt deadline: copies
+    expire, requeue on healthy replicas (resuming from the longest
+    emitted prefix, not from scratch), and finish byte-identical."""
+    model, params = _model("smollm-135m")
+    reqs = _prompts(model.cfg.vocab_size)
+    refs = [generate_offline(model, params, p, m, MAX_LEN) for p, m, _ in reqs]
+    events = [FaultEvent(step=0, kind="slow", worker=0, factor=40.0)]
+    fe = Frontend(_fleet(model, params), DELAY, cost_per_replica=10.0,
+                  events=events, deadline=0.06, retry_budget=4)
+    gids = [fe.submit(p, m, arrival=a) for p, m, a in reqs]
+    out = fe.run()
+    assert all(out[g].done and not out[g].dropped for g in gids)
+    assert [out[g].tokens for g in gids] == refs
+    s = fe.summary()
+    assert s["retries"] > 0
+    # The expiries were fed back as censored telemetry against the slow
+    # replica — at least one censored-only round on worker 0.
+    assert fe.router.tracker.rounds[0] > fe.router.tracker.wins[0]
+
+
+def test_frontend_retry_budget_drops_and_reports():
+    """With every replica effectively unusable, the retry budget bounds
+    the futile requeue loop and the request is reported dropped, not
+    spun forever."""
+    model, params = _model("smollm-135m")
+    events = [FaultEvent(step=0, kind="slow", worker=i, factor=500.0)
+              for i in range(2)]
+    fe = Frontend(_fleet(model, params, n=2), DELAY, cost_per_replica=10.0,
+                  events=events, deadline=0.02, retry_budget=1)
+    rng = np.random.default_rng(0)
+    gid = fe.submit(rng.integers(0, model.cfg.vocab_size, 8).astype(np.int32), 12)
+    out = fe.run()
+    assert out[gid].dropped and not out[gid].done
+    assert fe.summary()["dropped"] == 1
