@@ -1,0 +1,257 @@
+"""Trace analysis: summary tables + timeline export for obs traces.
+
+Consumes the Chrome ``trace_event`` JSON the ``repro.obs`` tracer
+exports (or any live ``Tracer``) and renders the ops view: per-lane
+busy/occupancy, span duration percentiles by name, instant counts, and
+the ``validate_trace`` invariant check. Two entry points:
+
+  * CLI over an existing trace file::
+
+        PYTHONPATH=src python -m analysis.trace_report TRACE.json [--json PATH]
+
+  * registered benchmark (``benchmarks.run`` benches dict): runs a small
+    traced chaos demo (2-of-3 replica fleet, kill + rejoin), validates
+    the trace, and reports the tables::
+
+        PYTHONPATH=src python -m benchmarks.run --only trace_report
+
+The demo doubles as the end-to-end acceptance path: the exported trace
+covers admission -> prefill -> decode -> completion including hedge
+cancels and the fault instants, with zero invariant violations.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from collections import defaultdict
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+DEFAULT_OUT = "BENCH_trace_report.json"
+
+
+def load_trace(path: str) -> List[Dict[str, Any]]:
+    """Read a trace file; accepts the ``{"traceEvents": [...]}`` wrapper
+    or a bare event list."""
+    with open(path) as f:
+        data = json.load(f)
+    return data["traceEvents"] if isinstance(data, dict) else data
+
+
+def _pct(sorted_vals: List[float], q: float) -> float:
+    return float(np.percentile(np.asarray(sorted_vals), q))
+
+
+def span_table(events: List[Dict[str, Any]]) -> List[Dict[str, Any]]:
+    """Duration stats per event name: complete ("X") events use ``dur``;
+    async span pairs use ``end.ts - begin.ts``. Sorted by total time, so
+    the first row is where the virtual clock actually went."""
+    durs: Dict[tuple, List[float]] = defaultdict(list)
+    open_: Dict[tuple, Dict[str, Any]] = {}
+    for ev in events:
+        ph = ev.get("ph")
+        if ph == "X":
+            durs[(ev["name"], "X")].append(float(ev.get("dur", 0.0)))
+        elif ph == "b":
+            open_[(ev["pid"], ev.get("cat"), ev.get("id"))] = ev
+        elif ph == "e":
+            b = open_.pop((ev["pid"], ev.get("cat"), ev.get("id")), None)
+            if b is not None:
+                durs[(b["name"], "span")].append(
+                    float(ev["ts"]) - float(b["ts"])
+                )
+    rows = []
+    for (name, kind), ds in durs.items():
+        ds.sort()
+        n = len(ds)
+        rows.append({
+            "name": name, "kind": kind, "count": n,
+            "total_us": round(sum(ds), 3),
+            "mean_us": round(sum(ds) / n, 3),
+            "p50_us": round(_pct(ds, 50), 3),
+            "p99_us": round(_pct(ds, 99), 3),
+            "max_us": round(ds[-1], 3),
+        })
+    rows.sort(key=lambda r: (-r["total_us"], r["name"]))
+    return rows
+
+
+def lane_table(events: List[Dict[str, Any]]) -> List[Dict[str, Any]]:
+    """Per-process (= per virtual clock) rollup: event counts, busy time
+    (sum of "X" durations), and the lane's virtual time extent."""
+    names: Dict[int, str] = {}
+    agg: Dict[int, Dict[str, float]] = defaultdict(
+        lambda: {"events": 0, "spans": 0, "busy_us": 0.0,
+                 "t0_us": float("inf"), "t1_us": float("-inf")}
+    )
+    for ev in events:
+        pid = ev.get("pid")
+        if ev.get("ph") == "M":
+            if ev.get("name") == "process_name":
+                names[pid] = ev["args"]["name"]
+            continue
+        a = agg[pid]
+        a["events"] += 1
+        if ev["ph"] == "b":
+            a["spans"] += 1
+        if ev["ph"] == "X":
+            a["busy_us"] += float(ev.get("dur", 0.0))
+        ts = float(ev.get("ts", 0.0))
+        a["t0_us"] = min(a["t0_us"], ts)
+        a["t1_us"] = max(a["t1_us"], ts + float(ev.get("dur", 0.0)))
+    rows = []
+    for pid in sorted(agg):
+        a = agg[pid]
+        extent = a["t1_us"] - a["t0_us"]
+        rows.append({
+            "pid": pid,
+            "lane": names.get(pid, f"pid {pid}"),
+            "events": int(a["events"]),
+            "spans": int(a["spans"]),
+            "busy_us": round(a["busy_us"], 3),
+            "extent_us": round(extent, 3) if extent >= 0 else 0.0,
+            "utilization": round(a["busy_us"] / extent, 4) if extent > 0 else 0.0,
+        })
+    return rows
+
+
+def instant_table(events: List[Dict[str, Any]]) -> Dict[str, int]:
+    counts: Dict[str, int] = defaultdict(int)
+    for ev in events:
+        if ev.get("ph") == "i":
+            counts[ev["name"]] += 1
+    return dict(sorted(counts.items()))
+
+
+def report(events: List[Dict[str, Any]]) -> Dict[str, Any]:
+    from repro.obs import validate_trace
+
+    return {
+        "n_events": len(events),
+        "errors": validate_trace(events),
+        "lanes": lane_table(events),
+        "spans": span_table(events),
+        "instants": instant_table(events),
+    }
+
+
+def print_report(rep: Dict[str, Any]) -> None:
+    print(f"{rep['n_events']} events, "
+          f"{len(rep['errors'])} invariant violations")
+    for err in rep["errors"][:10]:
+        print(f"  VIOLATION: {err}")
+    print(f"\n{'lane':>16s} {'events':>7s} {'spans':>6s} {'busy ms':>9s} "
+          f"{'extent ms':>10s} {'util':>6s}")
+    for r in rep["lanes"]:
+        print(f"{r['lane']:>16s} {r['events']:7d} {r['spans']:6d} "
+              f"{r['busy_us'] / 1e3:9.3f} {r['extent_us'] / 1e3:10.3f} "
+              f"{r['utilization']:6.2f}")
+    print(f"\n{'name':>16s} {'kind':>5s} {'count':>6s} {'total ms':>9s} "
+          f"{'p50 us':>9s} {'p99 us':>9s} {'max us':>9s}")
+    for r in rep["spans"]:
+        print(f"{r['name']:>16s} {r['kind']:>5s} {r['count']:6d} "
+              f"{r['total_us'] / 1e3:9.3f} {r['p50_us']:9.1f} "
+              f"{r['p99_us']:9.1f} {r['max_us']:9.1f}")
+    if rep["instants"]:
+        print("\ninstants: " + "  ".join(
+            f"{k}={v}" for k, v in rep["instants"].items()))
+
+
+def _demo_trace(fast: bool = True):
+    """Traced 3-replica chaos run (kill one mid-flight, rejoin later) —
+    the same plane perf_replicas measures, sized down to a smoke run."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.core.delay_models import SimplifiedDelayModel
+    from repro.models import build_model
+    from repro.obs import Observability
+    from repro.runtime.faults import FaultEvent
+    from repro.serve import Frontend, Replica
+
+    cfg = get_config("smollm").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    n_requests = 6 if fast else 16
+    rng = np.random.default_rng(3)
+    reqs = []
+    t = 0.0
+    for _ in range(n_requests):
+        p_len = int(rng.integers(4, 16))
+        n_new = int(rng.integers(4, 24))
+        t += float(rng.exponential(1.0 / 60.0))
+        reqs.append((rng.integers(0, cfg.vocab_size, size=p_len).astype(np.int32),
+                     n_new, t))
+
+    obs = Observability()
+    fleet = [
+        Replica(i, model, params, n_slots=4, max_len=64, block_size=8, obs=obs)
+        for i in range(3)
+    ]
+    fe = Frontend(
+        fleet, SimplifiedDelayModel(lambda_y=2.0), cost_per_replica=0.05,
+        events=[FaultEvent(step=8, kind="fail", worker=1),
+                FaultEvent(step=40, kind="rejoin", worker=1)],
+        obs=obs,
+    )
+    for p, m, a in reqs:
+        fe.submit(p, m, arrival=a)
+    fe.run()
+    return obs, fe
+
+
+def run(fast: bool = True, out: Optional[str] = None,
+        trace_out: Optional[str] = None) -> dict:
+    obs, fe = _demo_trace(fast)
+    if trace_out:
+        obs.tracer.export(trace_out)
+        print(f"wrote {trace_out}")
+    rep = report(obs.tracer.events)
+    print_report(rep)
+    assert not rep["errors"], f"trace invariant violations: {rep['errors'][:5]}"
+    assert not obs.tracer.open_spans, "spans leaked"
+    payload = {
+        "benchmark": "trace_report",
+        "mode": "fast" if fast else "full",
+        "completed": int(fe.summary()["completed"]),
+        "trace_valid": True,
+        "report": rep,
+    }
+    if out is not None:
+        from benchmarks.common import write_bench_json
+
+        payload = write_bench_json(out, payload)
+        print(f"wrote {out}")
+    return payload
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", nargs="?", default=None,
+                    help="trace JSON to analyze; omit to run the traced "
+                         "chaos demo instead")
+    ap.add_argument("--full", action="store_true",
+                    help="larger demo workload (demo mode only)")
+    ap.add_argument("--json", type=str, default=None, metavar="PATH",
+                    help="also write the report payload as JSON")
+    ap.add_argument("--trace-out", type=str, default=None, metavar="PATH",
+                    help="export the demo's trace JSON (demo mode only)")
+    args = ap.parse_args()
+
+    if args.trace is not None:
+        rep = report(load_trace(args.trace))
+        print_report(rep)
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump(rep, f, indent=2)
+            print(f"wrote {args.json}")
+        raise SystemExit(1 if rep["errors"] else 0)
+
+    run(fast=not args.full, out=args.json, trace_out=args.trace_out)
+
+
+if __name__ == "__main__":
+    main()

@@ -2,6 +2,12 @@
 
 from __future__ import annotations
 
+import datetime
+import glob
+import hashlib
+import json
+import os
+import subprocess
 import time
 
 import numpy as np
@@ -10,6 +16,86 @@ from repro.core import LinregProblem, simulate_batch
 
 PAPER_GRID = (0.2, 0.4, 0.6, 0.8, 1.0)   # the paper's beta set
 PAPER_TARGET = 2e-2                        # the paper's quoted readout gap
+
+#: bump when the shape of any BENCH_*.json payload changes incompatibly.
+BENCH_SCHEMA_VERSION = 1
+
+
+def _git_sha() -> str:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+        ).stdout.strip()
+        return out or "unknown"
+    except Exception:
+        return "unknown"
+
+
+def bench_meta(payload: dict) -> dict:
+    """Provenance block stamped into every ``BENCH_*.json``: schema
+    version, git sha, UTC timestamp, and a config hash over the
+    payload's top-level scalar fields (arch, mode, pool geometry, ...) —
+    cross-PR tooling can tell a perf change from a config change."""
+    scalars = {
+        k: v for k, v in payload.items()
+        if isinstance(v, (str, int, float, bool)) and not isinstance(v, type(None))
+    }
+    blob = json.dumps(scalars, sort_keys=True).encode()
+    return {
+        "schema_version": BENCH_SCHEMA_VERSION,
+        "git_sha": _git_sha(),
+        "timestamp": datetime.datetime.now(datetime.timezone.utc).isoformat(
+            timespec="seconds"
+        ),
+        "config_hash": hashlib.sha256(blob).hexdigest()[:16],
+    }
+
+
+def write_bench_json(path: str, payload: dict) -> dict:
+    """Stamp ``payload`` with a ``meta`` provenance block and write it.
+    The single seam every benchmark's ``--out`` goes through, so the
+    BENCH_* corpus stays uniformly machine-readable across PRs."""
+    payload = dict(payload)
+    payload["meta"] = bench_meta(payload)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    return payload
+
+
+def write_bench_index(
+    directory: str = ".", out: str = "BENCH_index.json"
+) -> dict:
+    """Aggregate every ``BENCH_*.json`` in ``directory`` into one index:
+    benchmark name, mode, and provenance meta per file. Returns the
+    index payload (written to ``out`` inside ``directory``)."""
+    entries = []
+    for path in sorted(glob.glob(os.path.join(directory, "BENCH_*.json"))):
+        if os.path.basename(path) == out:
+            continue
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            continue
+        entries.append({
+            "file": os.path.basename(path),
+            "benchmark": data.get("benchmark"),
+            "mode": data.get("mode"),
+            "meta": data.get("meta"),
+        })
+    index = {
+        "schema_version": BENCH_SCHEMA_VERSION,
+        "generated": datetime.datetime.now(datetime.timezone.utc).isoformat(
+            timespec="seconds"
+        ),
+        "git_sha": _git_sha(),
+        "benchmarks": entries,
+    }
+    with open(os.path.join(directory, out), "w") as f:
+        json.dump(index, f, indent=2)
+    return index
 
 
 def mean_curves(

@@ -29,7 +29,6 @@ on TPU by walking only live blocks.
 from __future__ import annotations
 
 import argparse
-import json
 import math
 import platform
 import time
@@ -41,6 +40,8 @@ from repro.configs import get_config
 from repro.models import build_model
 from repro.models.attention import round_kv_len
 from repro.serve import ServeEngine
+
+from .common import write_bench_json
 
 DEFAULT_OUT = "BENCH_paged.json"
 
@@ -170,8 +171,7 @@ def run(fast: bool = True, out: Optional[str] = None) -> dict:
           f"byte-identical {payload['tokens_byte_identical']}")
 
     if out is not None:
-        with open(out, "w") as f:
-            json.dump(payload, f, indent=2)
+        payload = write_bench_json(out, payload)
         print(f"wrote {out}")
     return payload
 

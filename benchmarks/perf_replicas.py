@@ -26,7 +26,6 @@ Hard gates (enforced here AND by the serve-chaos CI job):
 from __future__ import annotations
 
 import argparse
-import json
 import platform
 import time
 from typing import List, Optional, Tuple
@@ -38,6 +37,8 @@ from repro.core.delay_models import SimplifiedDelayModel
 from repro.models import build_model
 from repro.runtime.faults import FaultEvent
 from repro.serve import Frontend, Replica, generate_offline
+
+from .common import write_bench_json
 
 DEFAULT_OUT = "BENCH_replicas.json"
 
@@ -65,20 +66,21 @@ def make_workload(
     return reqs
 
 
-def _fleet(model, params):
+def _fleet(model, params, obs=None):
     return [
         Replica(i, model, params, n_slots=N_SLOTS, max_len=MAX_LEN,
-                block_size=BLOCK_SIZE)
+                block_size=BLOCK_SIZE, obs=obs)
         for i in range(N_REPLICAS)
     ]
 
 
 def _run_plane(model, params, reqs, events=(), **kw):
     delay = SimplifiedDelayModel(lambda_y=2.0)
+    obs = kw.pop("obs", None)
     fe = Frontend(
-        _fleet(model, params), delay,
+        _fleet(model, params, obs=obs), delay,
         cost_per_replica=kw.pop("cost_per_replica", 0.05),
-        events=list(events), **kw,
+        events=list(events), obs=obs, **kw,
     )
     gids = [fe.submit(p, m, arrival=a) for p, m, a in reqs]
     t0 = time.perf_counter()
@@ -126,9 +128,21 @@ def run(fast: bool = True, out: Optional[str] = None) -> dict:
     t_join = max(int(base["ticks"] * 0.7), t_fail + 1)
 
     # -- kill one replica at saturation, rejoin later ------------------------
+    # The chaos run carries a live Observability so the benchmark's
+    # metrics (hedge wins/cancels, fault counters, occupancy high-water)
+    # land in the payload through the registry, and the trace invariants
+    # hold under real failover.
+    from repro.obs import Observability, validate_trace
+
+    kill_obs = Observability()
     kill_events = [FaultEvent(step=t_fail, kind="fail", worker=1),
                    FaultEvent(step=t_join, kind="rejoin", worker=1)]
-    _, kill, kill_streams = _run_plane(model, params, reqs, kill_events)
+    _, kill, kill_streams = _run_plane(
+        model, params, reqs, kill_events, obs=kill_obs
+    )
+    trace_errors = validate_trace(kill_obs.tracer.events)
+    assert not trace_errors, f"trace invariant violations: {trace_errors[:5]}"
+    assert not kill_obs.tracer.open_spans, "spans leaked across failover"
     assert kill["dropped"] == 0 and kill["completed"] == n_requests, (
         f"chaos run dropped requests: {kill}"
     )
@@ -178,11 +192,17 @@ def run(fast: bool = True, out: Optional[str] = None) -> dict:
             "byte_identical_streams": True,
             "p99_kill_ratio": round(p99_ratio, 3),
             "p99_gate": P99_GATE,
+            "trace_valid": True,
+            "no_span_leaks": True,
+        },
+        "obs": {
+            "trace_events": len(kill_obs.tracer.events),
+            "hedge_decisions": len(kill_obs.decisions.by_domain("serve.hedge")),
+            "metrics": kill_obs.metrics.snapshot(),
         },
     }
     if out is not None:
-        with open(out, "w") as f:
-            json.dump(payload, f, indent=2)
+        payload = write_bench_json(out, payload)
         print(f"wrote {out}")
     return payload
 

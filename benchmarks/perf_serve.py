@@ -23,7 +23,6 @@ arrival rate and with the spread of per-request token budgets.
 from __future__ import annotations
 
 import argparse
-import json
 import platform
 import time
 from typing import List, Optional, Tuple
@@ -33,6 +32,8 @@ import numpy as np
 from repro.configs import get_config
 from repro.models import build_model
 from repro.serve import ServeEngine, run_static
+
+from .common import write_bench_json
 
 DEFAULT_OUT = "BENCH_serve.json"
 
@@ -129,6 +130,46 @@ def hedging_summary() -> dict:
     }
 
 
+def obs_overhead(model, params, n_requests: int) -> dict:
+    """Evidence for the observability plane's cost contract: with obs
+    left at the default (disabled ``NULL_OBS``) the instrumented engine
+    prices tokens on the virtual clock exactly as before, and turning
+    tracing+metrics ON must leave greedy token streams byte-identical —
+    the only honest cost is wall time, reported as a ratio."""
+    from repro.obs import Observability
+
+    reqs = make_workload(n_requests, 80.0, model.cfg.vocab_size, seed=SEED + 1)
+
+    def _go(obs):
+        eng = ServeEngine(
+            model, params, n_slots=N_SLOTS, max_len=MAX_LEN, obs=obs
+        )
+        for prompt, m, arr in reqs:
+            eng.submit(prompt, m, arrival=arr)
+        t0 = time.perf_counter()
+        results = eng.run()
+        wall = time.perf_counter() - t0
+        streams = {rid: tuple(r.tokens) for rid, r in results.items()}
+        return eng, streams, wall
+
+    eng_off, s_off, w_off = _go(None)            # default: NULL_OBS
+    eng_on, s_on, w_on = _go(Observability())    # tracer + metrics live
+    off_tps = eng_off.stats.tokens_per_vsec
+    on_tps = eng_on.stats.tokens_per_vsec
+    return {
+        "requests": n_requests,
+        "disabled_tokens_per_vsec": round(off_tps, 2),
+        "enabled_tokens_per_vsec": round(on_tps, 2),
+        "tokens_per_vsec_ratio": round(on_tps / max(off_tps, 1e-12), 6),
+        "disabled_wall_sec": round(w_off, 4),
+        "enabled_wall_sec": round(w_on, 4),
+        "wall_ratio": round(w_on / max(w_off, 1e-9), 3),
+        "tokens_byte_identical": s_off == s_on,
+        "trace_events": len(eng_on.obs.tracer.events),
+        "metrics": eng_on.obs.metrics.snapshot(),
+    }
+
+
 def run(fast: bool = True, out: Optional[str] = None) -> dict:
     import jax
 
@@ -165,10 +206,15 @@ def run(fast: bool = True, out: Optional[str] = None) -> dict:
         "python": platform.python_version(),
         "points": points,
         "hedging": hedging_summary(),
+        "obs_overhead": obs_overhead(model, params, n_requests),
     }
+    oo = payload["obs_overhead"]
+    print(f"obs overhead: tok/vs ratio {oo['tokens_per_vsec_ratio']:.4f} "
+          f"wall ratio {oo['wall_ratio']:.3f} "
+          f"byte-identical {oo['tokens_byte_identical']} "
+          f"({oo['trace_events']} trace events)")
     if out is not None:
-        with open(out, "w") as f:
-            json.dump(payload, f, indent=2)
+        payload = write_bench_json(out, payload)
         print(f"wrote {out}")
     return payload
 

@@ -18,7 +18,6 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import json
 import platform
 from typing import Optional, Tuple
 
@@ -32,7 +31,7 @@ from repro.core import (
     simulate_batch,
 )
 
-from .common import PAPER_GRID, Timer
+from .common import PAPER_GRID, Timer, write_bench_json
 
 DEFAULT_OUT = "BENCH_sim.json"
 
@@ -139,8 +138,7 @@ def run(fast: bool = True, out: Optional[str] = None) -> dict:
         "points": results,
     }
     if out is not None:
-        with open(out, "w") as f:
-            json.dump(payload, f, indent=2)
+        payload = write_bench_json(out, payload)
         print(f"wrote {out}")
     return payload
 

@@ -31,7 +31,6 @@ caveat.
 from __future__ import annotations
 
 import argparse
-import json
 import platform
 import time
 from typing import List, Optional, Tuple
@@ -41,6 +40,8 @@ import numpy as np
 from repro.configs import get_config
 from repro.models import build_model
 from repro.serve import Scheduler, ServeEngine, SpecController
+
+from .common import write_bench_json
 
 DEFAULT_OUT = "BENCH_spec.json"
 
@@ -195,8 +196,7 @@ def run(fast: bool = True, out: Optional[str] = None) -> dict:
           f"{adaptive.get('accept_hist')}")
 
     if out is not None:
-        with open(out, "w") as f:
-            json.dump(payload, f, indent=2)
+        payload = write_bench_json(out, payload)
         print(f"wrote {out}")
     return payload
 

@@ -29,11 +29,12 @@ Honesty constraints:
 from __future__ import annotations
 
 import argparse
-import json
 import platform
 from typing import Optional
 
 import numpy as np
+
+from .common import write_bench_json
 
 DEFAULT_OUT = "BENCH_train_adaptive.json"
 
@@ -191,8 +192,7 @@ def run(fast: bool = True, out: Optional[str] = None) -> dict:
     print(f"adaptive_kbeta speedups: {ratios}")
 
     if out is not None:
-        with open(out, "w") as f:
-            json.dump(payload, f, indent=2)
+        payload = write_bench_json(out, payload)
         print(f"wrote {out}")
     return payload
 

@@ -54,6 +54,8 @@ def main() -> None:
     args = ap.parse_args()
     fast = not args.full
 
+    from analysis import trace_report
+
     from . import fig1_3_theory, fig4_simulation, fig5to7_general_model
     from . import fig8to9_costs, perf_paged, perf_replicas, perf_serve
     from . import perf_sim, perf_spec, perf_train_adaptive, roofline_report
@@ -70,6 +72,7 @@ def main() -> None:
         "perf_spec": perf_spec.run,
         "perf_train_adaptive": perf_train_adaptive.run,
         "roofline_report": roofline_report.run,
+        "trace_report": trace_report.run,
     }
     if args.only:
         benches = {k: v for k, v in benches.items() if args.only in k}
@@ -91,6 +94,16 @@ def main() -> None:
     print("\nname,seconds,status")
     for name, secs, status in summary:
         print(f"{name},{secs:.1f},{status}")
+
+    # Index whatever BENCH_*.json files exist in the working directory
+    # (from standalone `python -m benchmarks.perf_*` runs) so CI uploads
+    # one manifest with per-file provenance meta.
+    from .common import write_bench_index
+
+    index = write_bench_index(".")
+    if index["benchmarks"]:
+        print(f"indexed {len(index['benchmarks'])} BENCH files "
+              f"-> BENCH_index.json")
 
     if args.json:
         payload = {

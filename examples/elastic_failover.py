@@ -18,9 +18,15 @@ identical to the uninterrupted run's tail — same losses, same stages,
 same sim-time — because the checkpoint round-trips the full controller
 state, tracker state, fleet membership, and both RNG streams.
 
-    PYTHONPATH=src python examples/elastic_failover.py
+Reporting goes through ``repro.obs``: the per-step lines and the demo's
+own milestones are echoes of structured ``StructuredLog`` records (the
+assertions read the records), and the chaos phase is traced — pass
+``--log PATH`` to export the record stream as JSON.
+
+    PYTHONPATH=src python examples/elastic_failover.py [--log PATH]
 """
 
+import argparse
 import tempfile
 
 import numpy as np
@@ -29,6 +35,7 @@ from repro.configs import get_config
 from repro.core import DiagnosticConfig, SimplifiedDelayModel, StrategyConfig
 from repro.data import StagedBatcher, TokenStream
 from repro.models import build_model
+from repro.obs import Observability
 from repro.optim.optimizers import get_optimizer
 from repro.runtime.train_loop import FaultEvent, TrainLoopConfig, train
 
@@ -67,18 +74,27 @@ def loop_cfg(ckdir):
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--log", type=str, default=None, metavar="PATH",
+                    help="export the structured record stream as JSON")
+    args = ap.parse_args()
+
+    obs = Observability(log_echo=True)
+    log = obs.log
+
     model, optimizer, strategy, delay, batcher = build()
     n = strategy.n
 
     with tempfile.TemporaryDirectory() as ckdir:
-        print(f"== phase 1: {TOTAL} steps of chaos "
-              "(slow@12, fail@30, rejoin@70) ==")
-        out = train(model, optimizer, strategy, delay, batcher, loop_cfg(ckdir))
+        log.emit("phase", name="chaos", steps=TOTAL,
+                 chaos="slow@12,fail@30,rejoin@70")
+        out = train(model, optimizer, strategy, delay, batcher, loop_cfg(ckdir),
+                    obs=obs)
         ctrl, hist = out["controller"], out["history"]
 
         n_by_step = {h["step"]: h["n_workers"] for h in hist}
-        print(f"workers: start {n_by_step[0]}, after fail {n_by_step[35]}, "
-              f"after rejoin {n_by_step[75]}, final controller n={ctrl.cfg.n}")
+        log.emit("fleet_size", start=n_by_step[0], after_fail=n_by_step[35],
+                 after_rejoin=n_by_step[75], final_n=ctrl.cfg.n)
         assert n_by_step[0] == n
         assert n_by_step[35] <= n - 1, "failed worker must be removed"
         assert min(n_by_step.values()) <= n - 2, \
@@ -88,12 +104,12 @@ def main():
         assert not out["alive"][1], "the demoted straggler stays out"
         assert out["alive"][0], "the rejoined worker is back"
 
-        print("\n== phase 2: exact resume from the step-80 checkpoint ==")
+        log.emit("phase", name="exact_resume", from_step=80)
         # Fresh model/optimizer/batcher objects: everything live must come
         # back from the checkpoint, not from leftover Python state.
         model2, optimizer2, strategy2, delay2, batcher2 = build()
         out2 = train(model2, optimizer2, strategy2, delay2, batcher2,
-                     loop_cfg(ckdir))
+                     loop_cfg(ckdir), obs=obs)
         steps2 = [h["step"] for h in out2["history"]]
         assert steps2[0] == 80, "must resume from the saved step"
 
@@ -101,13 +117,18 @@ def main():
         assert len(tail) == len(out2["history"])
         for a, b in zip(tail, out2["history"]):
             assert a == b, f"resume diverged at step {a['step']}:\n{a}\n{b}"
-        print(f"resumed at {steps2[0]}, ran to {steps2[-1]}; "
-              f"{len(tail)} resumed steps identical to the "
-              "uninterrupted run (loss, stage, sim-time, workers)")
+        log.emit("resume_check", resumed_at=steps2[0], ran_to=steps2[-1],
+                 identical_steps=len(tail),
+                 note="loss, stage, sim-time, workers all match the "
+                      "uninterrupted run")
 
         assert out2["controller"].cfg.n == ctrl.cfg.n
         np.testing.assert_array_equal(out2["alive"], out["alive"])
-        print("\nchaos + exact-resume demo OK")
+        log.emit("verdict", ok=True,
+                 stage_decisions=len(obs.decisions.by_domain("train.stage")),
+                 note="chaos + exact-resume demo OK")
+        if args.log:
+            log.export(args.log)
 
 
 if __name__ == "__main__":

@@ -26,8 +26,16 @@ serve-chaos job enforces via benchmarks/perf_replicas.py:
   * BYTE-IDENTICAL tokens — each request's stream equals a per-request
     offline greedy decode, fault or no fault.
 
-    PYTHONPATH=src python examples/elastic_serving.py
+Reporting goes through ``repro.obs``: every line printed is the echo of
+a structured ``StructuredLog`` record (the assertions below read the
+records, not the text), and the whole run is traced — pass ``--trace
+PATH`` to export the Chrome/Perfetto timeline, ``--log PATH`` for the
+record stream as JSON.
+
+    PYTHONPATH=src python examples/elastic_serving.py [--trace PATH] [--log PATH]
 """
+
+import argparse
 
 import jax
 import numpy as np
@@ -35,6 +43,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.core import SimplifiedDelayModel
 from repro.models import build_model
+from repro.obs import Observability, validate_trace
 from repro.runtime.faults import FaultEvent
 from repro.serve import Frontend, Replica, generate_offline
 
@@ -44,6 +53,16 @@ N_SLOTS = 2
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trace", type=str, default=None, metavar="PATH",
+                    help="export the run's Chrome trace JSON")
+    ap.add_argument("--log", type=str, default=None, metavar="PATH",
+                    help="export the structured record stream as JSON")
+    args = ap.parse_args()
+
+    obs = Observability(log_echo=True)
+    log = obs.log
+
     cfg = get_config("smollm-135m").reduced()
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
@@ -56,7 +75,8 @@ def main() -> None:
         prompt = rng.integers(0, cfg.vocab_size, size=p).astype(np.int32)
         reqs.append((prompt, m, i * 0.002))
 
-    print("offline reference decode (byte-identity oracle)...")
+    log.emit("reference_decode", requests=len(reqs),
+             note="offline greedy oracle for byte-identity")
     refs = [generate_offline(model, params, p, m, MAX_LEN) for p, m, _ in reqs]
 
     events = [
@@ -66,33 +86,49 @@ def main() -> None:
     ]
     replicas = [
         Replica(i, model, params, n_slots=N_SLOTS, max_len=MAX_LEN,
-                block_size=8)
+                block_size=8, obs=obs)
         for i in range(N_REPLICAS)
     ]
     fe = Frontend(
         replicas, SimplifiedDelayModel(lambda_y=2.0),
         cost_per_replica=0.001, events=events,
-        deadline=0.5, retry_budget=3,
+        deadline=0.5, retry_budget=3, obs=obs,
     )
     gids = [fe.submit(p, m, arrival=a) for p, m, a in reqs]
-    print(f"dispatching {len(gids)} requests over {N_REPLICAS} replicas "
-          f"with chaos: fail@12, slow@40, rejoin@90 ...")
+    log.emit("dispatch_begin", requests=len(gids), replicas=N_REPLICAS,
+             chaos="fail@12,slow@40,rejoin@90")
     out = fe.run()
 
     s = fe.summary()
-    print(f"\ncompleted={s['completed']} dropped={s['dropped']} "
-          f"retries={s['retries']} cancelled_copies={s['cancelled_copies']} "
-          f"p99={s['p99_latency']:.4f}vs")
+    log.emit("plane_summary", t=fe._frontier(),
+             completed=int(s["completed"]), dropped=int(s["dropped"]),
+             retries=int(s["retries"]),
+             cancelled_copies=int(s["cancelled_copies"]),
+             p99_latency=float(s["p99_latency"]))
     slow = fe.router._slowdowns()
-    print("router slowdown estimates:",
-          np.array2string(slow, precision=2))
+    log.emit("router_slowdowns",
+             estimates=[round(float(x), 2) for x in slow])
 
-    assert s["dropped"] == 0, "chaos must not drop requests"
+    # Assertions read the records, not the printed text.
+    summary = log.last("plane_summary").fields
+    assert summary["dropped"] == 0, "chaos must not drop requests"
     streams = [out[g].tokens for g in gids]
     assert streams == refs, "streams must be byte-identical to offline"
     # The slowed replica's telemetry reflects what the router observed.
     assert slow[2] >= slow[0], "slow replica should not price first"
-    print("\nOK: zero drops, byte-identical streams under fail/slow/rejoin")
+
+    errors = validate_trace(obs.tracer.events)
+    assert not errors, f"trace invariant violations: {errors[:5]}"
+    assert not obs.tracer.open_spans, "spans leaked across chaos"
+    log.emit("verdict", ok=True, trace_events=len(obs.tracer.events),
+             note="zero drops, byte-identical streams, valid trace "
+                  "under fail/slow/rejoin")
+
+    if args.trace:
+        obs.tracer.export(args.trace)
+        log.emit("artifact", artifact="trace", path=args.trace)
+    if args.log:
+        log.export(args.log)
 
 
 if __name__ == "__main__":

@@ -55,7 +55,14 @@ class StragglerTracker:
         alpha: float = 0.1,
         warmup: int = 16,
         min_expected_wins: float = 4.0,
+        metrics=None,
     ):
+        """``metrics``: optional duck-typed ``repro.obs.MetricsRegistry``
+        (kept optional so this module stays dependency-free for the
+        training runtime). When set, every ``observe`` feeds the
+        ``telemetry.censored_fraction`` histogram — the fraction of
+        eligible workers whose time was a censor level, the quantity the
+        censored MLE's accuracy hinges on."""
         self.n = n_workers
         self.alpha = alpha
         self.warmup = warmup
@@ -65,6 +72,10 @@ class StragglerTracker:
         self.rounds = np.zeros(n_workers, np.int64)  # eligible rounds per worker
         self.wins = np.zeros(n_workers, np.int64)    # actual observations
         self.expw = np.zeros(n_workers)     # expected wins under fairness
+        self._h_censored = (
+            metrics.histogram("telemetry.censored_fraction")
+            if metrics is not None else None
+        )
 
     def observe(
         self,
@@ -113,6 +124,12 @@ class StragglerTracker:
             n_t = int(eligible.sum())
             if n_t:
                 self.expw[eligible] += float(observed.sum()) / n_t
+        if self._h_censored is not None:
+            n_e = int(eligible.sum())
+            if n_e:
+                self._h_censored.observe(
+                    1.0 - float(observed[eligible].sum()) / n_e
+                )
 
     def reset_worker(self, w: int) -> None:
         """Forget a worker's history (e.g. it rejoined after recovery)."""

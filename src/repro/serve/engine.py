@@ -52,6 +52,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.layers import ParamSpec, is_paged_spec, slot_mask_select
+from repro.obs import NULL_OBS, Observability
 from repro.runtime.steps import (
     make_slot_decode_step,
     make_slot_prefill_step,
@@ -158,6 +159,8 @@ class ServeEngine:
         draft_params=None,
         gamma_max: int = 4,
         spec_controller: Optional[SpecController] = None,
+        obs: Optional[Observability] = None,
+        obs_name: Optional[str] = None,
     ):
         """``block_size`` turns on paged KV (see module docstring);
         ``arena_blocks`` caps the arena below full capacity to serve
@@ -169,7 +172,12 @@ class ServeEngine:
         ``SpecController(gamma_max)``). Greedy output stays byte-identical
         to the non-speculative engine and to offline decode — acceptance
         is exact argmax match, so speculation is purely a throughput
-        bet."""
+        bet.
+
+        ``obs``: observability bundle (``repro.obs``) — defaults to the
+        disabled ``NULL_OBS`` singleton, in which case every hook below
+        is a no-op costing one attribute check. ``obs_name`` labels this
+        engine's trace lane (replicas pass ``"replica <id>"``)."""
         if model.cfg.is_encoder:
             raise ValueError("serving needs a causal decoder architecture")
         self.model = model
@@ -182,6 +190,19 @@ class ServeEngine:
         self.prefill_bucket = prefill_bucket
         self.stats = EngineStats()
         self.events: List[Tuple[str, float, int]] = []  # (action, vtime, rid)
+        # -- observability ----------------------------------------------------
+        self.obs = obs or NULL_OBS
+        self._tr = self.obs.tracer
+        self.pid = self._tr.register_process(obs_name or "engine")
+        self._span_ids: Dict[int, int] = {}   # rid -> open lifecycle span
+        if self.sched.obs is NULL_OBS:
+            self.sched.bind_obs(self.obs)
+        m = self.obs.metrics
+        self._m_tokens = m.counter("engine.generated_tokens")
+        self._m_prefill_tokens = m.counter("engine.prefill_tokens")
+        self._m_decode_ticks = m.counter("engine.decode_ticks")
+        self._g_slots = m.gauge("engine.slots_active")
+        self._g_blocks = m.gauge("engine.arena_blocks_used")
         self._requests: Dict[int, Request] = {}
         self._next_rid = 0
         # Per-slot decode state (host side).
@@ -212,6 +233,8 @@ class ServeEngine:
             self.draft = DraftRunner(draft_model, draft_params, n_slots, max_len)
             self.spec = spec_controller or SpecController(gamma_max)
             self.spec.draft_fused = draft_model.fused_prefill
+            if self.spec.obs is NULL_OBS:
+                self.spec.obs = self.obs
 
     @property
     def speculative(self) -> bool:
@@ -249,7 +272,29 @@ class ServeEngine:
         )
         self._requests[rid] = req
         self.sched.submit(req)
+        if self._tr.enabled:
+            # The span opens at this engine's LOCAL clock, not at the
+            # logical arrival: a hedge copy can be handed to a replica
+            # whose clock is behind the arrival stamp, and span ends
+            # must never precede their begins.
+            self._span_ids[rid] = self._tr.begin_span(
+                "request", self.pid, self.sched.clock.now,
+                args={"rid": rid, "arrival": float(arrival),
+                      "prompt_len": int(prompt.size),
+                      "max_new_tokens": int(max_new_tokens)},
+            )
         return rid
+
+    def _end_request_span(self, req: Request, outcome: str, ts: float) -> None:
+        """Close a request's lifecycle span exactly once, whatever path
+        retired it (done / cancelled / deadline / migrated) — leaked
+        spans under chaos are a test failure (tests/test_obs.py)."""
+        sid = self._span_ids.pop(req.rid, None)
+        if sid:
+            self._tr.end_span(
+                sid, ts,
+                args={"outcome": outcome, "n_tokens": len(req.tokens)},
+            )
 
     # -- cancellation / deadlines --------------------------------------------
     def cancel(self, rid: int, reason: str = "cancelled") -> bool:
@@ -273,6 +318,12 @@ class ServeEngine:
         req.cancel_reason = reason
         self.stats.cancelled_requests += 1
         self.events.append(("cancel", self.sched.clock.now, rid))
+        now = self.sched.clock.now
+        self._end_request_span(req, reason, now)
+        if self.obs.enabled:
+            self.obs.metrics.counter(f"engine.cancel.{reason}").inc()
+            self._tr.instant("cancel", self.pid, now,
+                             args={"rid": rid, "reason": reason})
         return True
 
     def _expire_deadlines(self) -> List[int]:
@@ -332,6 +383,12 @@ class ServeEngine:
         req.cancel_reason = "migrated"
         self.stats.migrated_out += 1
         self.events.append(("migrate_out", self.sched.clock.now, rid))
+        now = self.sched.clock.now
+        self._end_request_span(req, "migrated", now)
+        if self.obs.enabled:
+            self.obs.metrics.counter("engine.migrated_out").inc()
+            self._tr.instant("migrate_out", self.pid, now,
+                             args={"rid": rid, "n_tokens": len(req.tokens)})
         return ticket
 
     def import_request(self, ticket: MigrationTicket) -> Optional[int]:
@@ -364,6 +421,21 @@ class ServeEngine:
         self._decoding[slot] = True
         self.stats.migrated_in += 1
         self.events.append(("migrate_in", self.sched.clock.now, rid))
+        now = self.sched.clock.now
+        if self._tr.enabled:
+            self._span_ids[rid] = self._tr.begin_span(
+                "request", self.pid, now,
+                args={"rid": rid, "arrival": float(ticket.arrival),
+                      "prompt_len": int(ticket.prompt.size),
+                      "max_new_tokens": int(ticket.max_new_tokens),
+                      "migrated_in": True,
+                      "tokens_so_far": len(ticket.tokens)},
+            )
+        if self.obs.enabled:
+            self.obs.metrics.counter("engine.migrated_in").inc()
+            self._tr.instant("migrate_in", self.pid, now,
+                             args={"rid": rid,
+                                   "n_tokens": len(ticket.tokens)})
         return rid
 
     # -- introspection (frontend/replica layers) -----------------------------
@@ -420,6 +492,7 @@ class ServeEngine:
 
     def _do_prefill(self, req: Request) -> None:
         sched, pool = self.sched, self.pool
+        t0 = sched.clock.now
         if req.prefilled == 0:
             sched.on_admit(req)
             slot = pool.allocate(owner=req.rid, n_tokens=self._budget(req))
@@ -469,6 +542,13 @@ class ServeEngine:
                 self._pending[slot] = tok
                 self._decoding[slot] = True
         self.events.append(("prefill", self.sched.clock.now, req.rid))
+        if self.obs.enabled:
+            self._m_prefill_tokens.inc(n_tok)
+            self._tr.complete(
+                "prefill", self.pid, t0, sched.clock.now,
+                args={"rid": req.rid, "start": start,
+                      "n_tokens": n_tok, "done": done},
+            )
 
     def _free_slot(self, slot: int) -> None:
         self.pool.free(slot)
@@ -477,6 +557,7 @@ class ServeEngine:
 
     def _do_decode(self) -> None:
         pool = self.pool
+        t0 = self.sched.clock.now
         mask = self._decoding.copy()
         tokens = jnp.asarray(self._pending[:, None])
         positions = jnp.asarray(np.clip(pool.positions, 0, pool.max_len - 1))
@@ -503,6 +584,12 @@ class ServeEngine:
             else:
                 self._pending[slot] = next_tok[slot]
         self.events.append(("decode", self.sched.clock.now, -1))
+        if self.obs.enabled:
+            self._m_decode_ticks.inc()
+            self._tr.complete(
+                "decode", self.pid, t0, self.sched.clock.now,
+                args={"lanes": int(mask.sum())},
+            )
 
     def _do_spec_round(self) -> None:
         """One draft-then-verify round over the whole pool (replaces a
@@ -518,6 +605,7 @@ class ServeEngine:
         draft resyncs by replaying the committed tokens from its
         snapshot."""
         pool, sched, draft = self.pool, self.sched, self.draft
+        t0 = sched.clock.now
         n_slots = pool.n_slots
         decoding = self._decoding.copy()
         slots = np.nonzero(decoding)[0]
@@ -613,17 +701,25 @@ class ServeEngine:
         self.stats.spec_rounds += 1
         self.stats.draft_ticks += draft_ticks
         self.events.append(("spec", sched.clock.now, -1))
+        if self.obs.enabled:
+            self._tr.complete(
+                "spec_round", self.pid, t0, sched.clock.now,
+                args={"gamma": int(gamma), "lanes": int(slots.size),
+                      "committed": int(sum(emitted_all))},
+            )
 
     def _emit(self, req: Request, tok: int) -> None:
         if not req.tokens:
             req.t_first_token = self.sched.clock.now
         req.tokens.append(tok)
         self.stats.generated_tokens += 1
+        self._m_tokens.inc()
 
     def _finished(self, req: Request) -> bool:
         if len(req.tokens) >= req.max_new_tokens:
             if req.t_done is None:
                 req.t_done = self.sched.clock.now
+                self._end_request_span(req, "done", req.t_done)
             return True
         return False
 
@@ -668,8 +764,21 @@ class ServeEngine:
             else:
                 self._do_decode()
         elif kind == "idle":
+            t0 = self.sched.clock.now
             self.sched.on_idle()
             self.events.append(("idle", self.sched.clock.now, -1))
+            if self._tr.enabled:
+                self._tr.complete("idle", self.pid, t0, self.sched.clock.now)
+        if self.obs.enabled and kind != "done":
+            self._g_slots.set(self.pool.n_active)
+            values = {"slots": int(self.pool.n_active)}
+            if self.pool.paged:
+                used = self.pool.manager.n_used_blocks
+                self._g_blocks.set(used)
+                values["blocks"] = int(used)
+            self._tr.counter(
+                "occupancy", self.pid, self.sched.clock.now, values
+            )
         return kind
 
     def run(self) -> Dict[int, Request]:

@@ -56,6 +56,7 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.obs import NULL_OBS, Observability
 from repro.runtime.faults import FaultEvent, schedule_by_step
 
 from .replica import Replica
@@ -110,19 +111,26 @@ class Frontend:
         n_max: Optional[int] = None,
         ewma_alpha: float = 0.1,
         warmup: int = 8,
+        obs: Optional[Observability] = None,
     ):
         """``deadline``: per-ATTEMPT virtual-second budget from local
         dispatch time (None = no deadlines). ``events``: chaos schedule
-        keyed on plane-wide engine steps (``self.ticks``)."""
+        keyed on plane-wide engine steps (``self.ticks``). ``obs``: the
+        observability bundle — shared with the router; replicas carry
+        their own (pass the same one when building them to get the full
+        fleet on one timeline)."""
         if not replicas:
             raise ValueError("need at least one replica")
         self.replicas = list(replicas)
         n_slots = self.replicas[0].engine.pool.n_slots
+        self.obs = obs or NULL_OBS
+        self._tr = self.obs.tracer
+        self.pid = self._tr.register_process("frontend")
         self.router = HedgedRouter(
             delay_model, n_replicas=len(self.replicas),
             quorum=quorum, cost_per_replica=cost_per_replica,
             slots_per_replica=n_slots, n_max=n_max,
-            ewma_alpha=ewma_alpha, warmup=warmup,
+            ewma_alpha=ewma_alpha, warmup=warmup, obs=self.obs,
         )
         self.beta = float(beta)
         self.deadline = deadline
@@ -135,6 +143,17 @@ class Frontend:
         self.dropped: List[int] = []
         self.migrations = 0
         self._next_gid = 0
+        # -- observability state ---------------------------------------------
+        self._gid_spans: Dict[int, int] = {}   # gid -> open lifecycle span
+        self._ts = 0.0                         # monotone frontend timestamp
+        m = self.obs.metrics
+        self._m_wins = m.counter("hedge.wins")
+        self._m_losers = m.counter("hedge.losers_cancelled")
+        self._m_expiries = m.counter("hedge.deadline_expiries")
+        self._m_retries = m.counter("frontend.retries")
+        self._m_dropped = m.counter("frontend.dropped")
+        self._m_migrations = m.counter("frontend.migrations")
+        self._h_latency = m.histogram("frontend.latency")
 
     # -- submission ----------------------------------------------------------
     def submit(self, prompt, max_new_tokens: int, arrival: float = 0.0) -> int:
@@ -145,15 +164,45 @@ class Frontend:
             int(max_new_tokens), float(arrival),
         )
         self.queue.append(fr)
+        if self._tr.enabled:
+            # Logical lifecycle span: [arrival, t_done]. Every retirement
+            # path stamps a ts >= arrival, so the span never inverts.
+            self._gid_spans[gid] = self._tr.begin_span(
+                "request", self.pid, fr.arrival,
+                args={"gid": gid, "prompt_len": int(fr.prompt.size),
+                      "max_new_tokens": int(max_new_tokens)},
+            )
         return gid
 
     # -- time ----------------------------------------------------------------
     def _frontier(self) -> float:
         return max((rep.now for rep in self.replicas if rep.alive), default=0.0)
 
+    def _stamp(self) -> float:
+        """Monotone frontend-lane timestamp: the fleet frontier can go
+        BACKWARD when the fastest replica fails, but a trace track may
+        not — clamp to the furthest time this lane has already stamped."""
+        self._ts = max(self._ts, self._frontier())
+        return self._ts
+
+    def _end_gid_span(self, fr: FrontendRequest, outcome: str, ts: float) -> None:
+        sid = self._gid_spans.pop(fr.gid, None)
+        if sid:
+            self._tr.end_span(
+                sid, max(ts, fr.arrival),
+                args={"outcome": outcome, "n_tokens": len(fr.tokens),
+                      "retries": fr.retries},
+            )
+
     # -- fault surface -------------------------------------------------------
     def _apply(self, ev: FaultEvent) -> None:
         rep = self.replicas[ev.worker]
+        if self._tr.enabled:
+            self._tr.instant(
+                "fault", self.pid, self._stamp(),
+                args={"kind": ev.kind, "replica": ev.worker,
+                      "tick": self.ticks},
+            )
         if ev.kind == "fail":
             self._on_fail(ev.worker)
         elif ev.kind == "slow":
@@ -246,6 +295,12 @@ class Frontend:
             self.router.release(src)
             self.router.occupy(dest.id)
             self.migrations += 1
+            self._m_migrations.inc()
+            if self._tr.enabled:
+                self._tr.instant(
+                    "migrate", self.pid, self._stamp(),
+                    args={"gid": fr.gid, "src": src, "dest": dest.id},
+                )
             return True
         # No destination could admit: the ticket dies, but its tokens
         # seed the requeue prefix (ticket.tokens = the full local stream).
@@ -297,6 +352,13 @@ class Frontend:
                 fr.copies[r] = rid
                 fr.t0[r] = local_arr
             self.inflight[fr.gid] = fr
+            if self._tr.enabled:
+                self._tr.instant(
+                    "dispatch", self.pid, self._stamp(),
+                    args={"gid": fr.gid, "n_h": plan.n_h,
+                          "replicas": list(plan.replicas),
+                          "retry": fr.retries},
+                )
 
     def _requeue(self, fr: FrontendRequest) -> None:
         fr.tokens = fr.tokens + fr.partial
@@ -307,13 +369,24 @@ class Frontend:
             # The dead copies had already finished the stream.
             fr.t_done = self._frontier()
             self.results[fr.gid] = fr
+            self._end_gid_span(fr, "done", fr.t_done)
+            self._h_latency.observe(fr.latency)
         elif fr.retries >= self.retry_budget:
             fr.dropped = True
             self.dropped.append(fr.gid)
             self.results[fr.gid] = fr
+            self._m_dropped.inc()
+            self._end_gid_span(fr, "dropped", self._stamp())
         else:
             fr.retries += 1
             self.queue.append(fr)
+            self._m_retries.inc()
+            if self._tr.enabled:
+                self._tr.instant(
+                    "requeue", self.pid, self._stamp(),
+                    args={"gid": fr.gid, "retry": fr.retries,
+                          "prefix_tokens": len(fr.tokens)},
+                )
 
     # -- harvest -------------------------------------------------------------
     def _harvest(self, rep: Replica) -> None:
@@ -349,6 +422,10 @@ class Frontend:
         fr.copies, fr.t0 = {}, {}
         self.inflight.pop(fr.gid, None)
         self.results[fr.gid] = fr
+        self._m_wins.inc()
+        self._m_losers.inc(len(participants) - 1)
+        self._h_latency.observe(fr.latency)
+        self._end_gid_span(fr, "done", fr.t_done)
 
     def _copy_expired(self, fr: FrontendRequest, r: int) -> None:
         rep = self.replicas[r]
@@ -364,6 +441,12 @@ class Frontend:
             np.zeros(self.router.n_replicas), [r],
             observed=[], censor_level=self.deadline,
         )
+        self._m_expiries.inc()
+        if self._tr.enabled:
+            self._tr.instant(
+                "deadline_expiry", self.pid, self._stamp(),
+                args={"gid": fr.gid, "replica": r},
+            )
         if not fr.copies:
             self._requeue(fr)
 

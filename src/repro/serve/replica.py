@@ -24,6 +24,8 @@ from __future__ import annotations
 
 from typing import List, Optional
 
+from repro.obs import Observability
+
 from .engine import ServeEngine
 from .scheduler import CostModel, EventClock, Request, Scheduler
 
@@ -73,6 +75,7 @@ class Replica:
         prefill_chunk: Optional[int] = None,
         decode_per_prefill: int = 4,
         prefill_bucket: int = 16,
+        obs: Optional[Observability] = None,
     ):
         self.id = int(replica_id)
         self.clock = FaultyClock(cost)
@@ -87,8 +90,19 @@ class Replica:
             n_slots=n_slots, max_len=max_len, scheduler=sched,
             prefill_bucket=prefill_bucket,
             block_size=block_size, arena_blocks=arena_blocks,
+            obs=obs, obs_name=f"replica {self.id}",
         )
         self.alive = True
+
+    def _fault_instant(self, kind: str, **args) -> None:
+        """Mark a fault-surface transition on this replica's trace lane."""
+        eng = self.engine
+        if eng.obs.enabled:
+            eng._tr.instant(
+                "fault", eng.pid, self.clock.now,
+                args={"kind": kind, "replica": self.id, **args},
+            )
+            eng.obs.metrics.counter(f"replica.fault.{kind}").inc()
 
     @property
     def now(self) -> float:
@@ -109,6 +123,7 @@ class Replica:
         if factor <= 0:
             raise ValueError("slow factor must be > 0")
         self.clock.slow = float(factor)
+        self._fault_instant("slow", factor=float(factor))
 
     def fail(self) -> List[Request]:
         """Hard failure: every in-flight request dies with the node.
@@ -117,6 +132,7 @@ class Replica:
         the cancelled requests, partial token streams intact, so the
         caller can requeue from the longest prefix."""
         self.alive = False
+        self._fault_instant("fail")
         eng = self.engine
         out = []
         for rid in eng.live_rids():
@@ -131,3 +147,4 @@ class Replica:
         self.alive = True
         self.clock.slow = 1.0
         self.clock.advance_to(now)
+        self._fault_instant("rejoin")

@@ -39,6 +39,7 @@ from typing import List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.order_stats import expected_kth
+from repro.obs import NULL_OBS, Observability
 from repro.runtime.telemetry import StragglerTracker
 
 __all__ = ["HedgePlan", "DispatchOutcome", "ReplicaSet", "HedgedRouter"]
@@ -94,6 +95,7 @@ class HedgedRouter:
         ewma_alpha: float = 0.1,
         warmup: int = 8,
         slow_cap: float = 1e6,
+        obs: Optional[Observability] = None,
     ):
         if not (1 <= quorum <= n_replicas):
             raise ValueError("need 1 <= quorum <= n_replicas")
@@ -103,7 +105,12 @@ class HedgedRouter:
         self.cost_per_replica = cost_per_replica
         self.slots_per_replica = slots_per_replica
         self.n_max = n_max or n_replicas
-        self.tracker = StragglerTracker(n_replicas, alpha=ewma_alpha, warmup=warmup)
+        self.obs = obs or NULL_OBS
+        self.tracker = StragglerTracker(
+            n_replicas, alpha=ewma_alpha, warmup=warmup,
+            metrics=self.obs.metrics if self.obs.enabled else None,
+        )
+        self._last_plan_key = None    # decision-log dedup (reprices only)
         self.inflight = np.zeros(n_replicas, np.int64)
         self.alive = np.ones(n_replicas, bool)
         #: finite stand-in for an unbounded censored estimate (a replica
@@ -193,6 +200,20 @@ class HedgedRouter:
             cost = lat + self.cost_per_replica * n
             if best is None or cost < best.expected_cost:
                 best = HedgePlan(n, k, tuple(subset), lat, cost)
+        if best is not None and self.obs.enabled:
+            key = (best.n_h, best.k, best.replicas)
+            if key != self._last_plan_key:
+                # A reprice: the chosen fan-out / quorum / replica subset
+                # changed since the last dispatch.
+                self._last_plan_key = key
+                self.obs.decisions.record(
+                    "serve.hedge",
+                    {"n_h": int(best.n_h), "k": int(best.k),
+                     "replicas": list(best.replicas)},
+                    {"slowdowns": [round(float(s), 6) for s in slow],
+                     "n_alive": self.n_alive, "beta": float(beta),
+                     "expected_latency": round(best.expected_latency, 9)},
+                )
         return best
 
     # -- dispatch lifecycle --------------------------------------------------

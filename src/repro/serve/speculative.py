@@ -47,6 +47,7 @@ import numpy as np
 
 from repro.core.order_stats import expected_kth, expected_kth_derivative
 from repro.models.layers import ParamSpec, slot_mask_select
+from repro.obs import NULL_OBS
 from repro.runtime.steps import make_slot_prefill_step, make_slot_replay_step
 
 from .kv_pool import SlotPool, model_scoped_cache
@@ -156,6 +157,10 @@ class SpecController:
         #: entry per speculating slot per round, so sums to ~occupancy x
         #: rounds) that accepted exactly ``a`` draft tokens.
         self.hist = np.zeros(gamma_max + 1, np.int64)
+        #: observability bundle, attached by the engine (same pattern as
+        #: ``draft_fused``); defaults to the disabled singleton.
+        self.obs = NULL_OBS
+        self._last_gamma: Optional[int] = None   # decision-log dedup
 
     # -- telemetry -----------------------------------------------------------
     def observe(self, accepted: int, offered: int) -> None:
@@ -164,6 +169,9 @@ class SpecController:
         if not (0 <= accepted <= offered):
             raise ValueError(f"accepted {accepted} outside [0, {offered}]")
         self.hist[min(accepted, self.gamma_max)] += 1
+        if self.obs.enabled:
+            self.obs.metrics.counter("spec.offered").inc(offered)
+            self.obs.metrics.counter("spec.accepted").inc(accepted)
         # Chain semantics: `accepted` successes, then at most ONE observed
         # failure; positions past the break are censored, not failures.
         outcomes = [1.0] * accepted + ([0.0] if accepted < offered else [])
@@ -212,7 +220,17 @@ class SpecController:
             # controller can re-enter speculation when conditions change.
             toks = expected_round_tokens(1, p)
             c = self.round_cost(1, cost)
-            return GammaPlan(1, toks, c, c / toks)
+            best = GammaPlan(1, toks, c, c / toks)
+        if best.gamma != self._last_gamma:
+            # Log the reprice (a CHANGED gamma), not every evaluation.
+            self._last_gamma = best.gamma
+            self.obs.decisions.record(
+                "serve.gamma",
+                {"gamma": int(best.gamma), "n_h": int(best.n_h)},
+                {"p": round(p, 6), "observations": self.observations,
+                 "cost_per_token": round(best.cost_per_token, 9)},
+                step=self.rounds,
+            )
         return best
 
     def choose_hedged(
