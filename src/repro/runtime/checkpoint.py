@@ -30,7 +30,19 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 import numpy as np
 
-__all__ = ["CheckpointManager"]
+__all__ = ["CheckpointError", "CheckpointManager", "CHECKPOINT_SCHEMA"]
+
+#: bump when the on-disk layout changes incompatibly. Checkpoints written
+#: before the field existed load as version 1.
+CHECKPOINT_SCHEMA = 1
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint on disk cannot be loaded: truncated or corrupt
+    ``arrays.npz``/``meta.json``, or a schema version this build does not
+    understand. Always names the offending path — the recovery action
+    (delete the directory, fall back to an older step, upgrade the code)
+    depends on WHICH file is bad."""
 
 
 def _flatten_with_paths(tree) -> Dict[str, np.ndarray]:
@@ -76,7 +88,8 @@ class CheckpointManager:
             shutil.rmtree(tmp)
         tmp.mkdir(parents=True)
         np.savez(tmp / "arrays.npz", **arrays)
-        meta = {"step": step, "time": time.time(), "extras": extras or {}}
+        meta = {"step": step, "time": time.time(),
+                "schema": CHECKPOINT_SCHEMA, "extras": extras or {}}
         (tmp / "meta.json").write_text(json.dumps(meta))
         # Durability order: file contents -> tmp dir entries -> atomic
         # rename -> parent dir entry (the rename itself) -> LATEST.
@@ -123,7 +136,13 @@ class CheckpointManager:
         name = ptr.read_text().strip()
         if not (self.root / name).exists():
             return None
-        return int(name.split("_")[-1])
+        try:
+            return int(name.split("_")[-1])
+        except ValueError as e:
+            raise CheckpointError(
+                f"corrupt LATEST pointer {ptr}: {name!r} is not a "
+                "step_NNNNNNNNN directory name"
+            ) from e
 
     def restore(
         self,
@@ -135,9 +154,33 @@ class CheckpointManager:
         ShapeDtypeStructs). device_put_fn(leaf, like_leaf) can re-shard
         onto the current mesh (elastic restart)."""
         d = self.root / f"step_{step:09d}"
-        with np.load(d / "arrays.npz") as data:
-            arrays = {k: data[k] for k in data.files}
-        meta = json.loads((d / "meta.json").read_text())
+        if not d.is_dir():
+            raise CheckpointError(f"no checkpoint directory at {d}")
+        arrays_path, meta_path = d / "arrays.npz", d / "meta.json"
+        try:
+            with np.load(arrays_path) as data:
+                arrays = {k: data[k] for k in data.files}
+        except FileNotFoundError as e:
+            raise CheckpointError(f"checkpoint missing {arrays_path}") from e
+        except Exception as e:  # zipfile.BadZipFile, OSError, ValueError, ...
+            raise CheckpointError(
+                f"truncated or corrupt checkpoint arrays at {arrays_path}: {e}"
+            ) from e
+        try:
+            meta = json.loads(meta_path.read_text())
+        except FileNotFoundError as e:
+            raise CheckpointError(f"checkpoint missing {meta_path}") from e
+        except (json.JSONDecodeError, UnicodeDecodeError, OSError) as e:
+            raise CheckpointError(
+                f"truncated or corrupt checkpoint metadata at {meta_path}: {e}"
+            ) from e
+        schema = meta.get("schema", 1)
+        if schema != CHECKPOINT_SCHEMA:
+            raise CheckpointError(
+                f"checkpoint {meta_path} has schema version {schema!r}; this "
+                f"build reads version {CHECKPOINT_SCHEMA} — load it with a "
+                "matching build instead of guessing at the layout"
+            )
 
         leaves_with_paths = jax.tree_util.tree_flatten_with_path(like)[0]
         treedef = jax.tree_util.tree_structure(like)

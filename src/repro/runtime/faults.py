@@ -37,7 +37,12 @@ __all__ = ["FaultEvent", "schedule_by_step"]
 
 @dataclasses.dataclass(frozen=True)
 class FaultEvent:
-    """A scheduled chaos event: unit ``worker`` at step ``step``."""
+    """A scheduled chaos event: unit ``worker`` at step ``step``.
+
+    Validated at CONSTRUCTION — a malformed event (unknown kind,
+    negative step/worker, non-positive slow factor) raises here, at the
+    point where the schedule is written, instead of failing deep inside
+    the consuming plane's event loop."""
 
     step: int
     kind: str
@@ -47,6 +52,25 @@ class FaultEvent:
     def __post_init__(self):
         if self.kind not in ("fail", "rejoin", "slow", "drain"):
             raise ValueError(f"unknown fault kind {self.kind!r}")
+        if self.step < 0:
+            raise ValueError(f"fault step must be >= 0, got {self.step}")
+        if self.worker < 0:
+            raise ValueError(f"fault worker must be >= 0, got {self.worker}")
+        if self.factor <= 0:
+            raise ValueError(
+                f"slow factor must be > 0, got {self.factor} "
+                "(use kind='fail' to remove a unit, factor=1.0 to restore)"
+            )
+
+    def as_dict(self) -> dict:
+        """JSON-serializable form (chaos-search repro schedules)."""
+        return {"step": self.step, "kind": self.kind,
+                "worker": self.worker, "factor": self.factor}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "FaultEvent":
+        return cls(step=int(d["step"]), kind=str(d["kind"]),
+                   worker=int(d["worker"]), factor=float(d.get("factor", 1.0)))
 
 
 def schedule_by_step(events: Iterable[FaultEvent]) -> Dict[int, List[FaultEvent]]:

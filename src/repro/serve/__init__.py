@@ -18,7 +18,15 @@ concurrently, actually frees loser slots and paged blocks on
 cancellation, polices per-request deadlines with bounded
 retry-and-requeue, degrades gracefully as the live fleet shrinks, and
 migrates in-flight requests between replicas by KV block handoff
-(DESIGN.md §13, chaos-tested in tests/test_replicas.py).
+(DESIGN.md §13, chaos-tested in tests/test_replicas.py). Since PR 9 the
+frontend↔replica hop is an explicit, faultable message transport
+(transport): submits / cancels / stream chunks / migration tickets are
+wire messages a declarative fault plan can drop, duplicate, reorder,
+delay, or partition away, and an idempotent at-least-once layer (acks,
+receiver dedup, telemetry-priced retransmission, ticket integrity
+checksums) keeps every zero-drop / byte-identity guarantee intact —
+property-searched by tools/chaos_search.py (DESIGN.md §15,
+docs/chaos.md).
 
 Public API contract: modules split cleanly into SPEC-DRIVEN (engine,
 kv_pool, speculative — generic over any ``model.cache_specs`` tree; no
@@ -34,22 +42,39 @@ from .engine import (
     EngineStats,
     MigrationTicket,
     ServeEngine,
+    TicketIntegrityError,
     generate_offline,
     run_static,
+    ticket_checksum,
 )
 from .frontend import Frontend, FrontendRequest
 from .kv_pool import BlockManager, SlotPool, SlotSnapshot
-from .replica import FaultyClock, Replica
+from .replica import FaultyClock, Replica, ReplicaPort
 from .router import DispatchOutcome, HedgedRouter, HedgePlan, ReplicaSet
 from .scheduler import CostModel, EventClock, Request, Scheduler, next_bucket
 from .speculative import DraftRunner, GammaPlan, SpecController, hedged_round_cost
+from .transport import (
+    FaultDirective,
+    Partition,
+    Transport,
+    TransportFaults,
+    TransportGaveUp,
+)
 
 __all__ = [
     "ServeEngine",
     "EngineStats",
     "MigrationTicket",
+    "TicketIntegrityError",
+    "ticket_checksum",
     "generate_offline",
     "run_static",
+    "Transport",
+    "TransportFaults",
+    "TransportGaveUp",
+    "FaultDirective",
+    "Partition",
+    "ReplicaPort",
     "SlotPool",
     "SlotSnapshot",
     "BlockManager",

@@ -44,6 +44,7 @@ distinction (fused vs scan verify commit) is documented on
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import time
 from typing import Dict, List, Optional, Tuple
 
@@ -64,9 +65,18 @@ from .scheduler import CostModel, EventClock, Request, Scheduler, next_bucket
 from .speculative import DraftRunner, SpecController
 
 __all__ = [
-    "ServeEngine", "EngineStats", "MigrationTicket",
-    "generate_offline", "run_static",
+    "ServeEngine", "EngineStats", "MigrationTicket", "TicketIntegrityError",
+    "ticket_checksum", "generate_offline", "run_static",
 ]
+
+
+class TicketIntegrityError(ValueError):
+    """A :class:`MigrationTicket` failed its end-to-end integrity check
+    at import: the payload was mutated between ``export_request`` (which
+    seals the checksum) and ``import_request`` (which verifies it).
+    Resuming from a corrupt ticket would silently diverge the greedy
+    stream — the importer must reject it and the owner requeue from the
+    last trusted prefix instead."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -86,6 +96,35 @@ class MigrationTicket:
     tokens: Tuple[int, ...]       # emitted so far (stream prefix)
     pending: int                  # next token to feed (last emitted)
     snapshot: SlotSnapshot
+    #: end-to-end integrity seal over every resume-relevant field,
+    #: computed at export (``ticket_checksum``) and verified at import.
+    #: ``None`` = unsealed (hand-built test tickets): import skips the
+    #: check, matching pre-checksum tickets.
+    checksum: Optional[str] = None
+
+
+def ticket_checksum(ticket: "MigrationTicket") -> str:
+    """SHA-256 over the ticket's resume-relevant content: prompt bytes,
+    budget, emitted tokens, pending token, and every snapshot cache leaf
+    (shape + dtype + raw bytes). Deliberately EXCLUDES ``deadline`` —
+    the owner legitimately rewrites it in flight (absolute deadlines are
+    clock-local, so migration carries remaining budget instead), and a
+    re-seal hook on the transfer path would be exactly the kind of
+    mutable-in-transit field an integrity seal must not cover."""
+    h = hashlib.sha256()
+    prompt = np.ascontiguousarray(np.asarray(ticket.prompt, np.int32))
+    h.update(prompt.tobytes())
+    h.update(np.int64(ticket.max_new_tokens).tobytes())
+    h.update(np.asarray(ticket.tokens, np.int64).tobytes())
+    h.update(np.int64(ticket.pending).tobytes())
+    snap = ticket.snapshot
+    h.update(np.int64(snap.position).tobytes())
+    h.update(np.int64(snap.n_blocks).tobytes())
+    for leaf in jax.tree_util.tree_leaves(snap.data):
+        a = np.ascontiguousarray(np.asarray(leaf))
+        h.update(str((a.shape, a.dtype.str)).encode())
+        h.update(a.tobytes())
+    return h.hexdigest()
 
 
 @dataclasses.dataclass
@@ -377,6 +416,10 @@ class ServeEngine:
             pending=int(self._pending[slot]),
             snapshot=self.pool.snapshot_slot(slot),
         )
+        # Seal AFTER the ticket is complete: the checksum covers every
+        # resume-relevant field (not the clock-local deadline, which the
+        # owner rewrites in flight — see ticket_checksum).
+        ticket = dataclasses.replace(ticket, checksum=ticket_checksum(ticket))
         self._decoding[slot] = False
         self._free_slot(slot)
         req.t_cancelled = self.sched.clock.now
@@ -400,6 +443,17 @@ class ServeEngine:
         if self.speculative:
             raise ValueError("cannot import into a speculative engine "
                              "(draft twin state is not snapshotted)")
+        if ticket.checksum is not None:
+            # Verify BEFORE touching the pool: a corrupt ticket must be
+            # rejected without allocating anything (reject-and-requeue is
+            # the owner's job; resuming from garbage would silently
+            # diverge the greedy stream).
+            expect = ticket_checksum(ticket)
+            if expect != ticket.checksum:
+                raise TicketIntegrityError(
+                    f"migration ticket failed integrity check: sealed "
+                    f"{ticket.checksum[:12]}…, recomputed {expect[:12]}…"
+                )
         budget = int(ticket.prompt.size) + int(ticket.max_new_tokens)
         if budget > self.pool.max_len:
             raise ValueError("ticket exceeds this engine's max_len")

@@ -143,6 +143,13 @@ class HedgedRouter:
         self.tracker.reset_worker(r)
 
     # -- pricing -------------------------------------------------------------
+    def slowdowns(self) -> np.ndarray:
+        """Public view of the per-replica slowdown estimates (see
+        ``_slowdowns``) — the transport prices its retransmission
+        timeouts from this, so retry backoff and hedged dispatch work
+        from the SAME censored-telemetry picture of the fleet."""
+        return self._slowdowns()
+
     def _slowdowns(self) -> np.ndarray:
         """Per-replica slowdown estimates.
 

@@ -1,0 +1,166 @@
+"""Chaos-search harness: campaign passes, violations found + shrunk,
+repros replay deterministically.
+
+Three layers of pins:
+
+1. With the reliability layer ON, sampled chaos schedules pass every
+   oracle (a slice of the CI campaign, same code path).
+2. With retransmission or dedup deliberately disabled, the harness
+   FINDS the violation the layer exists to prevent, shrinks it to a
+   single fault atom, and the minimal schedule replays bit-identically.
+3. Regression schedules for real bugs the harness caught during
+   development stay green (the whole point of minimal repros).
+"""
+
+import json
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from tools.chaos_search import (          # noqa: E402
+    Schedule,
+    Workload,
+    replay_repro,
+    run_schedule,
+    sample_schedule,
+    shrink,
+    write_repro,
+)
+
+from repro.runtime.faults import FaultEvent                 # noqa: E402
+from repro.serve import FaultDirective, Partition           # noqa: E402
+
+KNOBS = {"max_ticks": 6_000}
+
+
+@pytest.fixture(scope="module")
+def wl():
+    return Workload(n_requests=4)
+
+
+# ---------------------------------------------------------------------------
+# 1. The reliable plane passes sampled campaigns
+# ---------------------------------------------------------------------------
+
+def test_sampled_schedules_pass_all_oracles(wl):
+    for i in range(6):
+        sched = sample_schedule(np.random.default_rng([0, i]))
+        report = run_schedule(wl, sched, **KNOBS)
+        assert report.ok, (i, sched.as_dict(), report.violations)
+
+
+def test_schedule_json_roundtrip():
+    sched = sample_schedule(np.random.default_rng([7, 7]))
+    back = Schedule.from_dict(json.loads(json.dumps(sched.as_dict())))
+    assert back.as_dict() == sched.as_dict()
+    assert back.size() == sched.size()
+
+
+# ---------------------------------------------------------------------------
+# 2. Disabling the at-least-once layer is FOUND, shrunk, and replayable
+# ---------------------------------------------------------------------------
+
+def test_unreliable_drop_found_and_shrunk_to_one_atom(wl):
+    """A single dropped Submit strands the singleton-dispatch plane when
+    retransmission is off — and ddmin strips the noise atoms down to
+    exactly that drop. The same schedule is absorbed with the layer on."""
+    sched = Schedule(
+        events=[FaultEvent(step=40, kind="slow", worker=2, factor=2.0)],
+        directives=[
+            FaultDirective("fe", "r0", "drop", 0),
+            FaultDirective("r1", "fe", "delay", 50, ticks=3),
+        ],
+        partitions=[Partition("r2", "fe", 200, 210)],
+        cost_per_replica=10.0,
+    )
+    report = run_schedule(wl, sched, reliable=False, **KNOBS)
+    assert report.signature() == ("liveness",)
+
+    small = shrink(wl, sched, report.signature(), reliable=False, **KNOBS)
+    assert small.size() == 1
+    assert small.directives and small.directives[0].op == "drop"
+
+    # minimal repro replays deterministically
+    a = run_schedule(wl, small, reliable=False, **KNOBS)
+    b = run_schedule(wl, small, reliable=False, **KNOBS)
+    assert a.signature() == b.signature() == ("liveness",)
+
+    # the reliability layer absorbs the full schedule
+    assert run_schedule(wl, sched, **KNOBS).ok
+
+
+def test_no_dedup_duplicate_admission_found(wl):
+    """A duplicated Submit double-admits on the receiving engine when
+    receiver dedup is off — caught by the exactly-once oracle via the
+    port's god's-eye admission log."""
+    sched = Schedule(
+        events=[],
+        directives=[FaultDirective("fe", "r0", "dup", 0)],
+        partitions=[],
+        cost_per_replica=0.001,
+    )
+    report = run_schedule(wl, sched, dedup=False, **KNOBS)
+    assert report.signature() == ("exactly_once",)
+    assert run_schedule(wl, sched, **KNOBS).ok
+
+
+def test_corrupt_ticket_rejected_and_requeued(wl):
+    """In-flight ticket corruption survives the link CRC but not the
+    end-to-end checksum: the dest rejects, the frontend requeues from
+    the intact prefix, and every oracle still holds."""
+    sched = Schedule(
+        events=[FaultEvent(step=9, kind="drain", worker=1)],
+        directives=[FaultDirective("fe", "r0", "corrupt", 8)],
+        partitions=[],
+        cost_per_replica=10.0,
+    )
+    report = run_schedule(wl, sched, **KNOBS)
+    assert report.ok, report.violations
+    assert report.summary["ticket_rejects"] == 1
+    assert report.summary["migrations"] == 0
+
+
+def test_repro_file_roundtrip(tmp_path, wl):
+    sched = Schedule(
+        events=[], partitions=[], cost_per_replica=10.0,
+        directives=[FaultDirective("fe", "r0", "drop", 0)],
+    )
+    knobs = {"reliable": False, "dedup": True, "retry_budget": 8,
+             "max_ticks": 6_000}
+    report = run_schedule(wl, sched, **knobs)
+    assert report.signature() == ("liveness",)
+    path = str(tmp_path / "repro.json")
+    write_repro(path, seed=0, index=0, wl=wl, sched=sched, report=report,
+                knobs=knobs)
+    replayed = replay_repro(path)
+    assert replayed.signature() == report.signature()
+
+
+# ---------------------------------------------------------------------------
+# 3. Regression repros for real bugs the harness caught
+# ---------------------------------------------------------------------------
+
+def test_regression_drain_chunk_race_stays_clean(wl):
+    """A chunk racing its copy's migration export used to be dropped as
+    stale, leaving a permanent hole in the stream buffer (the ticket's
+    prefix now backfills the attempt buffer at export)."""
+    sched = Schedule(
+        events=[FaultEvent(step=9, kind="drain", worker=1, factor=3.904)],
+        directives=[], partitions=[], cost_per_replica=10.0,
+    )
+    assert run_schedule(wl, sched, **KNOBS).ok
+
+
+def test_regression_ticket_not_offered_to_hosting_replica(wl):
+    """Offering a migration ticket to a replica already hosting a hedged
+    copy of the same request used to orphan that copy's router slot
+    (``fr.copies`` is keyed by replica)."""
+    sched = Schedule(
+        events=[FaultEvent(step=4, kind="drain", worker=2, factor=2.583)],
+        directives=[], partitions=[], cost_per_replica=0.001,
+    )
+    assert run_schedule(wl, sched, **KNOBS).ok

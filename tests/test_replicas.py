@@ -76,6 +76,22 @@ def test_fault_event_shared_schema():
         FaultEvent(step=0, kind="explode", worker=0)
 
 
+def test_fault_event_validates_at_construction():
+    """Malformed chaos events fail where the schedule is WRITTEN, not
+    deep inside the consuming plane's event loop."""
+    with pytest.raises(ValueError):
+        FaultEvent(step=-1, kind="fail", worker=0)
+    with pytest.raises(ValueError):
+        FaultEvent(step=0, kind="fail", worker=-2)
+    with pytest.raises(ValueError):
+        FaultEvent(step=0, kind="slow", worker=0, factor=0.0)
+    with pytest.raises(ValueError):
+        FaultEvent(step=0, kind="slow", worker=0, factor=-3.0)
+    # JSON round-trip (chaos-search repro schedules)
+    ev = FaultEvent(step=7, kind="slow", worker=2, factor=2.5)
+    assert FaultEvent.from_dict(ev.as_dict()) == ev
+
+
 # ---------------------------------------------------------------------------
 # Router: degraded fleets + rejoin cold start
 # ---------------------------------------------------------------------------
@@ -362,3 +378,37 @@ def test_frontend_retry_budget_drops_and_reports():
     out = fe.run()
     assert out[gid].dropped and not out[gid].done
     assert fe.summary()["dropped"] == 1
+
+
+@pytest.mark.parametrize("drain_step", [6, 9, 12, 15])
+def test_deadline_expiry_racing_drain_resolves_exactly_once(drain_step):
+    """A drain exporting copies off a slowed replica while their
+    deadline expiries are in flight: whichever side of the race wins at
+    each step offset, every request resolves exactly once (done XOR
+    dropped, never both, never neither) and every slot, paged block,
+    and router count is freed."""
+    model, params = _model("smollm-135m")
+    reqs = _prompts(model.cfg.vocab_size, n=6)
+    refs = [generate_offline(model, params, p, m, MAX_LEN) for p, m, _ in reqs]
+    events = [FaultEvent(step=0, kind="slow", worker=0, factor=40.0),
+              FaultEvent(step=drain_step, kind="drain", worker=0),
+              FaultEvent(step=drain_step + 40, kind="rejoin", worker=0)]
+    fe = Frontend(_fleet(model, params), DELAY, cost_per_replica=10.0,
+                  events=events, deadline=0.06, retry_budget=6,
+                  max_ticks=20_000)
+    gids = [fe.submit(p, m, arrival=a) for p, m, a in reqs]
+    out = fe.run()
+    assert set(out) == set(gids)
+    for g in gids:
+        assert out[g].done != out[g].dropped       # exactly one terminal
+        if out[g].done:
+            assert out[g].tokens == refs[g]        # byte identity holds
+    for rep in fe.replicas:
+        assert rep.engine.live_rids() == []
+        assert rep.engine.pool.n_active == 0
+        if rep.engine.pool.manager is not None:
+            assert rep.engine.pool.manager.n_used_blocks == 0
+    assert (fe.router.inflight == 0).all()
+    assert not fe.transport.busy()
+    s = fe.summary()
+    assert s["completed"] + s["dropped"] == len(gids)

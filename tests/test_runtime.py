@@ -23,7 +23,11 @@ from repro.optim.optimizers import (
     momentum,
     sgd,
 )
-from repro.runtime.checkpoint import CheckpointManager
+from repro.runtime.checkpoint import (
+    CHECKPOINT_SCHEMA,
+    CheckpointError,
+    CheckpointManager,
+)
 from repro.runtime.telemetry import StragglerTracker
 
 
@@ -181,6 +185,79 @@ def test_checkpoint_atomicity_no_partial_dirs(tmp_path):
     mgr.save(1, {"w": jnp.zeros((2,))})
     leftovers = [p for p in tmp_path.iterdir() if p.name.startswith(".tmp")]
     assert not leftovers
+
+
+def test_checkpoint_truncated_arrays_names_offending_path(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep_last=10)
+    state = {"w": jnp.ones((4,))}
+    mgr.save(1, state)
+    bad = tmp_path / "step_000000001" / "arrays.npz"
+    bad.write_bytes(bad.read_bytes()[: 20])        # truncate mid-archive
+    with pytest.raises(CheckpointError) as e:
+        mgr.restore(1, state)
+    assert str(bad) in str(e.value)
+
+
+def test_checkpoint_corrupt_meta_names_offending_path(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep_last=10)
+    state = {"w": jnp.ones((4,))}
+    mgr.save(2, state)
+    bad = tmp_path / "step_000000002" / "meta.json"
+    bad.write_text('{"step": 2, "time":')           # truncated JSON
+    with pytest.raises(CheckpointError) as e:
+        mgr.restore(2, state)
+    assert str(bad) in str(e.value)
+
+
+def test_checkpoint_unknown_schema_refused(tmp_path):
+    import json as _json
+
+    mgr = CheckpointManager(tmp_path, keep_last=10)
+    state = {"w": jnp.ones((4,))}
+    mgr.save(3, state)
+    meta_path = tmp_path / "step_000000003" / "meta.json"
+    meta = _json.loads(meta_path.read_text())
+    meta["schema"] = CHECKPOINT_SCHEMA + 1
+    meta_path.write_text(_json.dumps(meta))
+    with pytest.raises(CheckpointError) as e:
+        mgr.restore(3, state)
+    msg = str(e.value)
+    assert str(meta_path) in msg and str(CHECKPOINT_SCHEMA + 1) in msg
+
+
+def test_checkpoint_missing_dir_and_corrupt_latest(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    state = {"w": jnp.ones((2,))}
+    with pytest.raises(CheckpointError) as e:
+        mgr.restore(77, state)
+    assert "step_000000077" in str(e.value)
+    mgr.save(5, state)
+    # a LATEST pointing at an existing entry whose name is not a step
+    # directory is corrupt (a dangling pointer, by contrast, just means
+    # "no checkpoint" — pruning can legitimately leave one)
+    (tmp_path / "not-a-step-dir").mkdir()
+    (tmp_path / "LATEST").write_text("not-a-step-dir")
+    with pytest.raises(CheckpointError) as e:
+        mgr.latest_step()
+    assert "LATEST" in str(e.value)
+
+
+def test_checkpoint_pre_schema_checkpoints_still_load(tmp_path):
+    """Checkpoints written before the schema field existed load as
+    version 1 — hardening must not orphan old runs."""
+    import json as _json
+
+    mgr = CheckpointManager(tmp_path)
+    state = {"w": jnp.arange(4.0)}
+    mgr.save(8, state, extras={"stage": {"k": 2}})
+    meta_path = tmp_path / "step_000000008" / "meta.json"
+    meta = _json.loads(meta_path.read_text())
+    del meta["schema"]
+    meta_path.write_text(_json.dumps(meta))
+    restored, extras = mgr.restore(8, state)
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(state["w"]))
+    assert extras["stage"]["k"] == 2
 
 
 # ---------------------------------------------------------------------------

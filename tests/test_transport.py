@@ -1,0 +1,244 @@
+"""Transport fabric semantics + migration-ticket integrity.
+
+Unit-level pins for ``serve.transport``: the declarative fault plan
+(drop/dup/delay/reorder/corrupt/partition, all JSON round-trippable),
+the at-least-once layer (ack + retransmit, receiver dedup, give-up),
+and the end-to-end ticket checksum (sealed at export, verified at
+import, deadline excluded by design). The system-level consequences —
+byte identity and zero drops under every fault mix — are searched by
+tools/chaos_search.py and pinned in tests/test_chaos_search.py.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serve import (
+    FaultDirective,
+    Partition,
+    ServeEngine,
+    TicketIntegrityError,
+    Transport,
+    TransportFaults,
+    TransportGaveUp,
+    generate_offline,
+    ticket_checksum,
+)
+from repro.serve.transport import FE, Cancel, Submit
+
+MAX_LEN = 64
+
+
+# ---------------------------------------------------------------------------
+# Fault plan: validation + JSON round-trip
+# ---------------------------------------------------------------------------
+
+def test_fault_directive_validation():
+    with pytest.raises(ValueError):
+        FaultDirective(src="fe", dst="r0", op="explode", nth=0)
+    with pytest.raises(ValueError):
+        FaultDirective(src="fe", dst="r0", op="drop", nth=-1)
+    with pytest.raises(ValueError):
+        FaultDirective(src="fe", dst="r0", op="delay", nth=0, ticks=-2)
+
+
+def test_partition_validation():
+    with pytest.raises(ValueError):
+        Partition(src="fe", dst="r0", t0=5, t1=5)
+    with pytest.raises(ValueError):
+        Partition(src="fe", dst="r0", t0=-1, t1=5)
+
+
+def test_fault_plan_json_roundtrip():
+    plan = TransportFaults(
+        [FaultDirective("fe", "r0", "drop", 0),
+         FaultDirective("r1", "fe", "delay", 3, ticks=4)],
+        [Partition("fe", "r2", 10, 20)],
+    )
+    back = TransportFaults.from_dict(plan.as_dict())
+    assert back.as_dict() == plan.as_dict()
+    assert len(back) == 3
+    assert back.ops_for("fe", "r0", 0) == plan.ops_for("fe", "r0", 0)
+    assert back.partitioned("fe", "r2", 15) and not back.partitioned(
+        "fe", "r2", 20
+    )
+
+
+# ---------------------------------------------------------------------------
+# Channel + reliability layer (host-only, no model)
+# ---------------------------------------------------------------------------
+
+def _drain(t: Transport, until: int = 60):
+    """Run the plane's delivery loop standalone: pump + receive on both
+    ends each tick, collecting what r0 sees."""
+    got = []
+    for tick in range(until):
+        t.pump(tick)
+        got += [m.payload for m in t.receive("r0", tick)]
+        t.receive(FE, tick)     # strip acks so retransmission stops
+    return got
+
+
+def test_drop_without_reliability_loses_the_message():
+    t = Transport(1, TransportFaults([FaultDirective("fe", "r0", "drop", 0)]),
+                  reliable=False)
+    t.send(FE, "r0", Cancel(7, 0), 0)
+    assert _drain(t) == []
+    assert t.stats()["dropped"] == 1 and not t.busy()
+
+
+def test_reliable_retransmit_survives_drop_exactly_once():
+    t = Transport(1, TransportFaults([FaultDirective("fe", "r0", "drop", 0)]),
+                  base_rto_ticks=1)
+    t.send(FE, "r0", Cancel(7, 0), 0)
+    got = _drain(t)
+    assert [p.gid for p in got] == [7]
+    s = t.stats()
+    # n_sent counts transmissions, so the retransmission shows up as a
+    # second send on the fe->r0 link (plus the reverse-direction ack).
+    assert s["dropped"] == 1 and s["sent"] >= 3 and not t.busy()
+
+
+def test_duplicate_suppressed_by_receiver_dedup():
+    t = Transport(1, TransportFaults([FaultDirective("fe", "r0", "dup", 0)]))
+    t.send(FE, "r0", Cancel(3, 1), 0)
+    got = _drain(t)
+    assert [(p.gid, p.attempt) for p in got] == [(3, 1)]
+    assert t.stats()["duplicated"] == 1 and not t.busy()
+
+
+def test_duplicate_delivered_twice_without_dedup():
+    t = Transport(1, TransportFaults([FaultDirective("fe", "r0", "dup", 0)]),
+                  dedup=False)
+    t.send(FE, "r0", Cancel(3, 1), 0)
+    got = _drain(t)
+    assert [(p.gid, p.attempt) for p in got] == [(3, 1), (3, 1)]
+
+
+def test_delay_holds_delivery_until_the_tick():
+    t = Transport(1, TransportFaults(
+        [FaultDirective("fe", "r0", "delay", 0, ticks=5)]))
+    t.send(FE, "r0", Cancel(0, 0), 0)
+    assert t.receive("r0", 4) == []
+    assert [m.payload.gid for m in t.receive("r0", 5)] == [0]
+
+
+def test_reorder_swaps_adjacent_messages():
+    t = Transport(1, TransportFaults(
+        [FaultDirective("fe", "r0", "reorder", 0, ticks=2)]), reliable=False)
+    t.send(FE, "r0", Cancel(0, 0), 0)
+    t.send(FE, "r0", Cancel(1, 0), 0)
+    got = _drain(t)
+    assert [p.gid for p in got] == [1, 0]
+
+
+def test_partition_heals_and_retransmit_gets_through():
+    t = Transport(1, TransportFaults([], [Partition("fe", "r0", 0, 6)]),
+                  base_rto_ticks=1)
+    t.send(FE, "r0", Cancel(9, 0), 0)
+    got = _drain(t)
+    assert [p.gid for p in got] == [9] and not t.busy()
+
+
+def test_unhealed_partition_raises_gave_up():
+    t = Transport(1, TransportFaults([], [Partition("fe", "r0", 0, 10**6)]),
+                  base_rto_ticks=1, max_attempts=3)
+    t.send(FE, "r0", Cancel(0, 0), 0)
+    with pytest.raises(TransportGaveUp):
+        for tick in range(10_000):
+            t.pump(tick)
+
+
+def test_forget_endpoint_clears_traffic_both_ways():
+    t = Transport(1, None, base_rto_ticks=1)
+    t.send(FE, "r0", Cancel(0, 0), 0)
+    t.send("r0", FE, Cancel(1, 0), 0)
+    t.forget_endpoint("r0")
+    assert not t.busy()
+    assert t.receive("r0", 1) == [] and t.receive(FE, 1) == []
+    # sends to a dead endpoint are silently dropped, not queued
+    t.send(FE, "r0", Cancel(2, 0), 2)
+    assert not t.busy()
+    t.revive_endpoint("r0")
+    t.send(FE, "r0", Cancel(3, 0), 3)
+    assert [p.gid for p in _drain(t)] == [3]
+
+
+def test_corrupt_nonticket_degrades_to_drop():
+    """Link-level corruption on anything but a migration ticket is a
+    CRC failure: the message is discarded (and retransmission recovers
+    it when the reliability layer is on)."""
+    t = Transport(1, TransportFaults(
+        [FaultDirective("fe", "r0", "corrupt", 0)]), reliable=False)
+    t.send(FE, "r0", Submit(0, 0, np.arange(4, dtype=np.int32), 8, 0.0, None),
+           0)
+    assert _drain(t) == []
+    # counted as a loss, not a delivered mutation — ``corrupted`` only
+    # counts payloads mutated in flight AND delivered (tickets)
+    s = t.stats()
+    assert s["dropped"] == 1 and s["corrupted"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Migration ticket integrity (sealed at export, verified at import)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    cfg = get_config("smollm-135m").reduced()
+    model = build_model(cfg)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def _exported_ticket(model, params):
+    src = ServeEngine(model, params, n_slots=2, max_len=MAX_LEN, block_size=8)
+    prompt = np.random.default_rng(5).integers(
+        0, model.cfg.vocab_size, 12
+    ).astype(np.int32)
+    rid = src.submit(prompt, 10)
+    while len(src.request(rid).tokens) < 3:
+        src.step()
+    return src.export_request(rid), prompt
+
+
+def test_export_seals_and_import_verifies(model_and_params):
+    model, params = model_and_params
+    ticket, prompt = _exported_ticket(model, params)
+    assert ticket.checksum is not None
+    assert ticket.checksum == ticket_checksum(ticket)
+    dst = ServeEngine(model, params, n_slots=2, max_len=MAX_LEN, block_size=8)
+    rid = dst.import_request(ticket)
+    assert rid is not None
+    out = dst.run()
+    assert out[rid].tokens == generate_offline(model, params, prompt, 10,
+                                               MAX_LEN)
+
+
+def test_tampered_ticket_rejected_before_allocation(model_and_params):
+    model, params = model_and_params
+    ticket, _ = _exported_ticket(model, params)
+    toks = list(ticket.tokens)
+    toks[-1] ^= 1
+    evil = dataclasses.replace(ticket, tokens=tuple(toks))
+    dst = ServeEngine(model, params, n_slots=2, max_len=MAX_LEN, block_size=8)
+    with pytest.raises(TicketIntegrityError) as e:
+        dst.import_request(evil)
+    assert ticket.checksum[:12] in str(e.value)
+    # reject-and-requeue contract: the dest engine is untouched
+    assert dst.pool.n_active == 0 and not dst.has_work
+
+
+def test_deadline_restamp_does_not_break_the_seal(model_and_params):
+    """Absolute deadlines are clock-local — the receiving replica
+    legitimately rewrites them in flight, so they are excluded from the
+    checksum by design."""
+    model, params = model_and_params
+    ticket, _ = _exported_ticket(model, params)
+    restamped = dataclasses.replace(ticket, deadline=123.456)
+    assert ticket_checksum(restamped) == ticket.checksum
+    dst = ServeEngine(model, params, n_slots=2, max_len=MAX_LEN, block_size=8)
+    assert dst.import_request(restamped) is not None
