@@ -65,26 +65,46 @@ def write_bench_json(path: str, payload: dict) -> dict:
 
 
 def write_bench_index(
-    directory: str = ".", out: str = "BENCH_index.json"
+    directory: str = ".", out: str = "BENCH_index.json",
+    required: tuple = (),
 ) -> dict:
     """Aggregate every ``BENCH_*.json`` in ``directory`` into one index:
     benchmark name, mode, and provenance meta per file. Returns the
-    index payload (written to ``out`` inside ``directory``)."""
+    index payload (written to ``out`` inside ``directory``).
+
+    ``required`` names BENCH files (e.g. ``("BENCH_prefix.json",)``)
+    that MUST be present and parseable: a registered benchmark whose
+    JSON is missing or corrupt raises ``RuntimeError`` instead of being
+    silently dropped from the manifest — a bench that stops emitting
+    its file should fail the run, not vanish from the index."""
     entries = []
+    problems = []
+    seen = set()
     for path in sorted(glob.glob(os.path.join(directory, "BENCH_*.json"))):
-        if os.path.basename(path) == out:
+        name = os.path.basename(path)
+        if name == out:
             continue
         try:
             with open(path) as f:
                 data = json.load(f)
-        except (OSError, json.JSONDecodeError):
+        except (OSError, json.JSONDecodeError) as e:
+            if name in required:
+                problems.append(f"{name}: unreadable ({e})")
             continue
+        seen.add(name)
         entries.append({
-            "file": os.path.basename(path),
+            "file": name,
             "benchmark": data.get("benchmark"),
             "mode": data.get("mode"),
             "meta": data.get("meta"),
         })
+    missing = [name for name in required if name not in seen]
+    problems += [f"{name}: missing" for name in missing
+                 if not any(p.startswith(name) for p in problems)]
+    if problems:
+        raise RuntimeError(
+            "bench index: required BENCH files absent or corrupt — "
+            + "; ".join(sorted(problems)))
     index = {
         "schema_version": BENCH_SCHEMA_VERSION,
         "generated": datetime.datetime.now(datetime.timezone.utc).isoformat(

@@ -57,8 +57,9 @@ def main() -> None:
     from analysis import trace_report
 
     from . import fig1_3_theory, fig4_simulation, fig5to7_general_model
-    from . import fig8to9_costs, perf_paged, perf_replicas, perf_serve
-    from . import perf_sim, perf_spec, perf_train_adaptive, roofline_report
+    from . import fig8to9_costs, perf_paged, perf_prefix, perf_replicas
+    from . import perf_serve, perf_sim, perf_spec, perf_train_adaptive
+    from . import roofline_report
 
     benches = {
         "fig1_3_theory": fig1_3_theory.run,
@@ -68,6 +69,7 @@ def main() -> None:
         "perf_sim": perf_sim.run,
         "perf_serve": perf_serve.run,
         "perf_paged": perf_paged.run,
+        "perf_prefix": perf_prefix.run,
         "perf_replicas": perf_replicas.run,
         "perf_spec": perf_spec.run,
         "perf_train_adaptive": perf_train_adaptive.run,
@@ -95,12 +97,26 @@ def main() -> None:
     for name, secs, status in summary:
         print(f"{name},{secs:.1f},{status}")
 
-    # Index whatever BENCH_*.json files exist in the working directory
-    # (from standalone `python -m benchmarks.perf_*` runs) so CI uploads
-    # one manifest with per-file provenance meta.
+    # Index the BENCH_*.json files in the working directory (from
+    # standalone `python -m benchmarks.perf_*` runs) so CI uploads one
+    # manifest with per-file provenance meta. Every perf_* bench that
+    # ran here is REQUIRED: a registered bench whose JSON is missing or
+    # corrupt fails the run instead of silently dropping out of the
+    # index. (Skipped under --only, which runs a subset by design.)
     from .common import write_bench_index
 
-    index = write_bench_index(".")
+    required = ()
+    if not args.only:
+        from . import perf_paged, perf_prefix, perf_replicas, perf_serve
+        from . import perf_sim, perf_spec, perf_train_adaptive
+
+        required = tuple(sorted(
+            m.DEFAULT_OUT for m in (
+                perf_paged, perf_prefix, perf_replicas, perf_serve,
+                perf_sim, perf_spec, perf_train_adaptive,
+            )
+        ))
+    index = write_bench_index(".", required=required)
     if index["benchmarks"]:
         print(f"indexed {len(index['benchmarks'])} BENCH files "
               f"-> BENCH_index.json")

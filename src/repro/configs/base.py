@@ -30,6 +30,13 @@ class MoEConfig:
     router_aux_weight: float = 0.001  # load-balance loss weight
     d_shared: int = 0          # hidden size of the shared expert (0 = d_expert)
     dispatch: str = "data"     # dispatched-token sharding: data | model | grouped
+    # Inference mode: capacity = the full token count, so no token is ever
+    # dropped. Capacity-dropped routing makes logits depend on how many
+    # tokens share one forward call — a training throughput concession that
+    # breaks chunked-prefill/prefix-sharing byte-identity (a 27-token
+    # prompt prefilled as 8+8+8+3 drops different tokens than one 27-token
+    # call). Dropless routing is token-local and therefore chunk-invariant.
+    dropless: bool = False
 
 
 @dataclasses.dataclass(frozen=True)

@@ -81,7 +81,14 @@ def cache_row_update(
     (num_blocks+1, block_size, ...) and the single decode row
     (S_new == 1) is scattered to ``arena[table[b, idx//bs], idx % bs]``.
     Dead lanes carry NULL table entries, so their writes land in the sink
-    block — no per-slot masking needed."""
+    block — no per-slot masking needed.
+
+    Copy-on-write contract (prefix sharing, DESIGN.md §16): the scatter
+    writes blindly through the table, so the CALLER must guarantee every
+    targeted block is private (refcount 1) — the pool's
+    ``ensure_writable`` forks shared blocks (table swap + device copy)
+    before the write reaches here. This function stays fork-oblivious by
+    design: forking on the host keeps the jitted scatter shape-stable."""
     new = new.astype(cache.dtype)
     if block_table is not None:
         bs = cache.shape[1]
@@ -117,7 +124,14 @@ def cache_rows_update(
     ``n_valid`` (B,) marks how many of the P rows are real per sequence;
     rows past it are dropped (contiguous) or routed to the NULL sink
     (paged), so one fixed-shape verify call can carry ragged per-slot
-    draft lengths as data."""
+    draft lengths as data.
+
+    Copy-on-write contract: same as ``cache_row_update`` — callers must
+    fork shared blocks in ``[start, start + n_valid)`` first
+    (``SlotPool.ensure_writable``). Adopted prefix blocks always sit
+    BELOW the write start (prefill resumes after the adopted rows), so
+    under the serving engine the only shared row a prefill chunk can
+    touch is the full-match re-feed, which forks before the call."""
     new = new.astype(cache.dtype)
     B, P = new.shape[:2]
     start = jnp.asarray(start, jnp.int32)

@@ -35,6 +35,7 @@ __all__ = [
     "slot_write",
     "slot_reset",
     "slot_take",
+    "slot_block_copy",
     "slot_mask_select",
     "rms_norm",
     "layer_norm",
@@ -202,6 +203,23 @@ def slot_take(caches, specs, perm):
             return c
         return jnp.take(c, perm, axis=batch_axis_of(s))
     return jax.tree.map(take, caches, specs, is_leaf=_is_spec)
+
+
+def slot_block_copy(caches, specs, src, dst):
+    """Copy arena block ``src`` into block ``dst`` on every paged leaf —
+    the device half of a copy-on-write fork. The BlockManager swaps the
+    writer's table entry to ``dst`` on the host; after this copy the
+    subsequent ``cache_row_update``/``cache_rows_update`` scatter lands
+    in the private clone, never in the shared original. Contiguous
+    leaves pass through untouched (they are never shared)."""
+    def cp(c, s):
+        if not is_paged_spec(s):
+            return c
+        ax = s.axes.index("kv_blocks")
+        m = jnp.moveaxis(c, ax, 0)
+        m = m.at[dst].set(m[src])
+        return jnp.moveaxis(m, 0, ax)
+    return jax.tree.map(cp, caches, specs, is_leaf=_is_spec)
 
 
 def slot_mask_select(mask, new_caches, old_caches, specs):

@@ -29,7 +29,11 @@ __all__ = ["moe_specs", "moe_apply", "moe_capacity"]
 
 
 def moe_capacity(moe: MoEConfig, tokens: int) -> int:
-    """Static per-expert capacity for a given token count."""
+    """Static per-expert capacity for a given token count. Dropless mode
+    (inference) sizes the buffer for the worst case — every token on one
+    expert — so routing is token-local and chunk-geometry-invariant."""
+    if moe.dropless:
+        return max(tokens, moe.top_k)
     cap = int(moe.capacity_factor * tokens * moe.top_k / moe.n_experts)
     return max(cap, moe.top_k)
 

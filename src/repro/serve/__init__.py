@@ -48,7 +48,13 @@ from .engine import (
     ticket_checksum,
 )
 from .frontend import Frontend, FrontendRequest
-from .kv_pool import BlockManager, SlotPool, SlotSnapshot
+from .kv_pool import (
+    ArenaExhausted,
+    BlockManager,
+    PrefixIndex,
+    SlotPool,
+    SlotSnapshot,
+)
 from .replica import FaultyClock, Replica, ReplicaPort
 from .router import DispatchOutcome, HedgedRouter, HedgePlan, ReplicaSet
 from .scheduler import CostModel, EventClock, Request, Scheduler, next_bucket
@@ -78,6 +84,8 @@ __all__ = [
     "SlotPool",
     "SlotSnapshot",
     "BlockManager",
+    "ArenaExhausted",
+    "PrefixIndex",
     "Replica",
     "FaultyClock",
     "Frontend",

@@ -52,6 +52,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.models.attention import NULL_BLOCK
 from repro.models.layers import ParamSpec, is_paged_spec, slot_mask_select
 from repro.obs import NULL_OBS, Observability
 from repro.runtime.steps import (
@@ -60,7 +61,7 @@ from repro.runtime.steps import (
     make_slot_verify_step,
 )
 
-from .kv_pool import SlotPool, SlotSnapshot, model_scoped_cache
+from .kv_pool import ArenaExhausted, SlotPool, SlotSnapshot, model_scoped_cache
 from .scheduler import CostModel, EventClock, Request, Scheduler, next_bucket
 from .speculative import DraftRunner, SpecController
 
@@ -137,6 +138,9 @@ class EngineStats:
     draft_ticks: int = 0          # sequential draft decode ticks
     spec_accepted: int = 0        # draft tokens the target accepted
     cancelled_requests: int = 0   # deadline expiries + explicit cancels
+    preempted_requests: int = 0   # evict-and-requeue events (prefix sharing)
+    prefix_hits: int = 0          # admissions that adopted a trie chain
+    prefix_rows_shared: int = 0   # cache rows skipped via adoption
     migrated_out: int = 0         # requests exported as MigrationTickets
     migrated_in: int = 0          # tickets restored into this engine
     virtual_seconds: float = 0.0
@@ -194,6 +198,7 @@ class ServeEngine:
         prefill_bucket: int = 16,
         block_size: Optional[int] = None,
         arena_blocks: Optional[int] = None,
+        prefix_sharing: bool = False,
         draft_model=None,
         draft_params=None,
         gamma_max: int = 4,
@@ -204,6 +209,15 @@ class ServeEngine:
         """``block_size`` turns on paged KV (see module docstring);
         ``arena_blocks`` caps the arena below full capacity to serve
         under an explicit memory budget (admit-by-budget queuing).
+
+        ``prefix_sharing`` (paged only, DESIGN.md §16) switches the
+        arena to copy-on-write sharing with preempt-and-requeue:
+        admissions adopt trie-matched prompt blocks instead of
+        recomputing them, shared blocks fork before any write, and
+        arena pressure evicts the cheapest lane (recompute-vs-hold
+        priced by the cost model) rather than queuing. Greedy streams
+        stay byte-identical to offline decode — including preempted
+        requests, which replay from the longest resident prefix.
 
         ``draft_model``/``draft_params`` turn on speculative decoding
         (DESIGN.md §12): decode actions become draft-then-verify rounds
@@ -219,12 +233,35 @@ class ServeEngine:
         engine's trace lane (replicas pass ``"replica <id>"``)."""
         if model.cfg.is_encoder:
             raise ValueError("serving needs a causal decoder architecture")
+        if prefix_sharing and draft_model is not None:
+            raise ValueError(
+                "prefix_sharing and speculative decoding are mutually "
+                "exclusive: the draft twin pool does not track the target's "
+                "copy-on-write forks, so lockstep would silently break"
+            )
+        if (prefix_sharing and model.cfg.moe is not None
+                and not model.cfg.moe.dropless):
+            raise ValueError(
+                "prefix_sharing requires dropless MoE routing "
+                "(cfg.moe.dropless=True): adopting a prefix changes how "
+                "many tokens share the suffix prefill call, and "
+                "capacity-dropped routing makes logits depend on that "
+                "count — byte-identity to offline decode would silently "
+                "break"
+            )
         self.model = model
         self.params = params
+        self.prefix_sharing = bool(prefix_sharing)
         self.pool = SlotPool(
             model, n_slots, max_len,
             block_size=block_size, arena_blocks=arena_blocks,
+            prefix_sharing=prefix_sharing,
         )
+        #: chaos-search teeth only (tools/chaos_search.py --leak-blocks):
+        #: when set, a CANCELLED slot's last block is dropped instead of
+        #: freed — a seeded refcount bug the block-conservation oracle
+        #: must catch and ddmin must shrink to the one cancel atom.
+        self._chaos_leak_blocks = False
         self.sched = scheduler or Scheduler(n_slots)
         self.prefill_bucket = prefill_bucket
         self.stats = EngineStats()
@@ -352,6 +389,17 @@ class ServeEngine:
         if rid in self.pool.owner:              # holds a slot (prefill/decode)
             slot = self._slot_of(rid)
             self._decoding[slot] = False
+            if self._chaos_leak_blocks and self.pool.paged:
+                # Seeded bug (chaos teeth): drop the slot's last block on
+                # the cancel path without freeing it. Only cancel-bearing
+                # schedules trip the conservation oracle, so ddmin can
+                # shrink the repro to exactly that one atom.
+                mgr = self.pool.manager
+                owned = mgr._owned[slot]
+                if owned:
+                    bid = owned.pop()
+                    mgr.tables[slot, len(owned)] = NULL_BLOCK
+                    mgr.refcount[bid] -= 1
             self._free_slot(slot)
         req.t_cancelled = self.sched.clock.now
         req.cancel_reason = reason
@@ -530,7 +578,20 @@ class ServeEngine:
         return req.prompt_len + req.max_new_tokens
 
     def _can_admit(self, req: Request) -> bool:
-        return self.pool.can_admit(self._budget(req))
+        if not self.prefix_sharing:
+            return self.pool.can_admit(self._budget(req))
+        # Sharing mode: no whole-budget commitment — admit when the
+        # PREFILL (minus whatever the trie already holds) fits the live
+        # free list, leaving at least one block of headroom. Decode-time
+        # growth is covered by preempt-and-requeue, not by reservation.
+        pool = self.pool
+        if pool.n_free == 0 or not pool.manager.can_commit(self._budget(req)):
+            return False
+        mgr = pool.manager
+        matched = (0 if pool._any_contiguous
+                   else len(pool.prefix.match(req.prefill_target())))
+        need = mgr.blocks_for(req.prefill_len) - matched
+        return mgr.n_free_blocks >= max(need, 1)
 
     def _fresh_slot_caches(self):
         """Batch-1 caches for a first prefill chunk: blank contiguous
@@ -547,14 +608,28 @@ class ServeEngine:
     def _do_prefill(self, req: Request) -> None:
         sched, pool = self.sched, self.pool
         t0 = sched.clock.now
-        if req.prefilled == 0:
+        target = req.prefill_target()   # prompt, + emitted[:-1] on replay
+        first = req.rid not in pool.owner
+        if first:
+            # First chunk. (Detected by slot ownership, not prefilled==0:
+            # a trie adoption below pre-advances ``prefilled``.)
             sched.on_admit(req)
             slot = pool.allocate(owner=req.rid, n_tokens=self._budget(req))
             assert slot is not None, "scheduler admitted without slot/blocks"
-            slot_caches = self._fresh_slot_caches()
+            if self.prefix_sharing:
+                matched = pool.adopt_prefix(slot, target)
+                if matched:
+                    if matched == len(target):
+                        # Full-block full match: re-feed the last token so
+                        # its write forks the shared tail block — the
+                        # emitted continuation needs logits at that row.
+                        matched -= 1
+                        pool.positions[slot] = matched
+                    req.prefilled = matched
+                    self.stats.prefix_hits += 1
+                    self.stats.prefix_rows_shared += matched
         else:
             slot = self._slot_of(req.rid)
-            slot_caches = pool.read_slot(slot)
 
         start, n_tok = sched.chunk_for(req)
         # Cap the pad bucket at the slot capacity past `start`: an oversized
@@ -563,10 +638,24 @@ class ServeEngine:
         # submit() guarantees n_tok <= max_len - start.
         bucket = min(next_bucket(n_tok, self.prefill_bucket), pool.max_len - start)
         chunk = np.zeros((1, bucket), np.int32)
-        chunk[0, :n_tok] = req.prompt[start : start + n_tok]
+        chunk[0, :n_tok] = target[start : start + n_tok]
         # Lazily grow the slot's block table to cover the chunk's real
-        # rows (bucket overhang past them falls into the NULL sink).
-        pool.ensure_rows(slot, start + n_tok)
+        # rows (bucket overhang past them falls into the NULL sink), and
+        # fork any shared block the scatter would touch (only the full-
+        # match re-feed row can be shared: adopted blocks sit below the
+        # write start). Either can hit arena pressure under sharing.
+        self._ensure_preempting(
+            slot, lambda: pool.ensure_rows(slot, start + n_tok)
+        )
+        if self.prefix_sharing:
+            self._ensure_preempting(
+                slot, lambda: pool.ensure_writable(slot, start, start + n_tok)
+            )
+        # Capture the slot view AFTER the ensures: a copy-on-write fork
+        # rewrites pool.caches, and an earlier capture would hand the
+        # prefill a stale arena missing the forked block's rows.
+        slot_caches = (self._fresh_slot_caches() if first
+                       else pool.read_slot(slot))
         logits, slot_caches = self._prefill(
             self.params,
             jnp.asarray(chunk),
@@ -583,18 +672,28 @@ class ServeEngine:
                 slot, jnp.asarray(chunk), n_tok, start, owner=req.rid
             )
             sched.on_draft_prefill(n_tok)
-        done = start + n_tok >= req.prompt_len
+        done = start + n_tok >= req.prefill_len
         sched.on_prefill_chunk(req, n_tok, done)
         self.stats.prefill_calls += 1
         self.stats.prefill_tokens += n_tok
         if done:
-            tok = int(jnp.argmax(logits[0, -1]))
-            self._emit(req, tok)
-            if self._finished(req):     # max_new_tokens == 1
-                self._free_slot(slot)
-            else:
-                self._pending[slot] = tok
+            if self.prefix_sharing:
+                pool.register_prefix(slot, req.prompt)
+            if req.tokens:
+                # Replay of a preempted request: every emitted token is
+                # already in the stream — re-enter decode exactly where
+                # the eviction hit, feeding the last emitted token. No
+                # emit here, so the stream stays byte-identical.
+                self._pending[slot] = np.int32(req.tokens[-1])
                 self._decoding[slot] = True
+            else:
+                tok = int(jnp.argmax(logits[0, -1]))
+                self._emit(req, tok)
+                if self._finished(req):     # max_new_tokens == 1
+                    self._free_slot(slot)
+                else:
+                    self._pending[slot] = tok
+                    self._decoding[slot] = True
         self.events.append(("prefill", self.sched.clock.now, req.rid))
         if self.obs.enabled:
             self._m_prefill_tokens.inc(n_tok)
@@ -609,17 +708,130 @@ class ServeEngine:
         if self.speculative:
             self.draft.pool.free(slot)
 
+    # -- preemption (prefix sharing, DESIGN.md §16) --------------------------
+    def _recompute_cost(self, req: Request, slot: int) -> float:
+        """Price of evicting ``slot`` now: prefill over the replay
+        sequence MINUS whatever prefix would still be trie-resident
+        after the victim's own references drop (it re-adopts that part
+        for free on requeue)."""
+        replay = req.prompt_len + max(len(req.tokens) - 1, 0)
+        resident = self.pool.match_resident(
+            req.prefill_target(), exclude_slot=slot
+        )
+        return self.sched.clock.cost.recompute(replay - resident)
+
+    def _preempt_slot(self, slot: int) -> None:
+        """Evict ``slot``'s request and requeue it: blocks freed NOW,
+        emitted tokens kept, next admission replays from the longest
+        still-resident prefix (byte-identical continuation — pinned in
+        tests/test_prefix.py)."""
+        req = self._requests[self.pool.owner[slot]]
+        self._decoding[slot] = False
+        self._pending[slot] = 0
+        self._free_slot(slot)
+        self.sched.requeue(req)
+        self.stats.preempted_requests += 1
+        now = self.sched.clock.now
+        self.events.append(("preempt", now, req.rid))
+        if self.obs.enabled:
+            self.obs.metrics.counter("engine.preempted").inc()
+            self._tr.instant("preempt", self.pid, now,
+                             args={"rid": req.rid,
+                                   "n_tokens": len(req.tokens)})
+
+    def _preempt_for(self, needy_slot: int) -> None:
+        """FORCED eviction: ``needy_slot``'s in-flight write hit an empty
+        free list and must proceed (its action is half-priced already).
+        Evict the cheapest-to-recompute OTHER lane, preferring decoding
+        lanes (a mid-prefill lane has no emitted stream to protect).
+        Livelock-free: every forced preemption follows the preemptor
+        completing a write + emit, so global progress is monotone."""
+        best, best_rc = None, None
+        for s in np.nonzero(self.pool.active)[0]:
+            s = int(s)
+            if s == needy_slot:
+                continue
+            rc = self._recompute_cost(
+                self._requests[self.pool.owner[s]], s
+            )
+            # Decoding lanes first: preempting the mid-prefill lane the
+            # scheduler is committed to would wedge its chunk loop.
+            rank = (0 if self._decoding[s] else 1, rc)
+            if best_rc is None or rank < best_rc:
+                best, best_rc = s, rank
+        if best is None:
+            raise RuntimeError(
+                f"arena exhausted with no preemptable lane (slot "
+                f"{needy_slot} alone holds the arena) — raise arena_blocks"
+            )
+        self._preempt_slot(best)
+
+    def _ensure_preempting(self, slot: int, fn) -> None:
+        """Run a block-allocating pool op, evicting lanes until it fits
+        (sharing mode; pass-through elsewhere — legacy commitment makes
+        exhaustion impossible)."""
+        while True:
+            try:
+                return fn()
+            except ArenaExhausted:
+                self._preempt_for(slot)
+
+    def _maybe_preempt_for_admission(self) -> None:
+        """PRICED eviction at admission: when the queue head is blocked
+        on blocks (not on slots), evict the lane whose recompute is
+        cheapest — but only if recompute undercuts holding it to
+        completion (the paper's wait-vs-recompute trade, priced by the
+        event-clock cost model), and only from requests strictly YOUNGER
+        than the head. The age guard makes admission eviction a strict
+        priority order, so two queued requests can never evict each
+        other in a ping-pong (the oldest live request is never evicted
+        for admission — it only ever finishes). At most one eviction per
+        step keeps the policy incremental and replayable."""
+        sched = self.sched
+        if sched.running:
+            return                      # finish the in-flight prefill first
+        req = sched._eligible()
+        if req is None or self.pool.n_free == 0 or self._can_admit(req):
+            return
+        cost = sched.clock.cost
+        head_key = (req.arrival, req.rid)
+        best, best_rc = None, None
+        for s in np.nonzero(self.pool.active)[0]:
+            s = int(s)
+            victim = self._requests[self.pool.owner[s]]
+            if (victim.arrival, victim.rid) <= head_key:
+                continue                # never evict an older request
+            rc = self._recompute_cost(victim, s)
+            hold = cost.hold(victim.max_new_tokens - len(victim.tokens))
+            if rc < hold and (best_rc is None or rc < best_rc):
+                best, best_rc = s, rc
+        if best is not None:
+            self._preempt_slot(best)
+
     def _do_decode(self) -> None:
         pool = self.pool
         t0 = self.sched.clock.now
+        # Each decoding lane writes one row at its position: grow its
+        # block table (and fork any shared block under sharing) BEFORE
+        # snapshotting the lane mask — under arena pressure these ensures
+        # may preempt OTHER decoding lanes, which must then drop out of
+        # this tick. Legacy mode never fails here (whole-budget commit).
+        for slot in np.nonzero(self._decoding)[0]:
+            slot = int(slot)
+            if not self._decoding[slot]:
+                continue                # preempted by an earlier ensure
+            pos = int(pool.positions[slot])
+            self._ensure_preempting(
+                slot, lambda s=slot, p=pos: pool.ensure_rows(s, p + 1)
+            )
+            if self.prefix_sharing and self._decoding[slot]:
+                self._ensure_preempting(
+                    slot,
+                    lambda s=slot, p=pos: pool.ensure_writable(s, p, p + 1),
+                )
         mask = self._decoding.copy()
         tokens = jnp.asarray(self._pending[:, None])
         positions = jnp.asarray(np.clip(pool.positions, 0, pool.max_len - 1))
-        # Each decoding lane writes one row at its position: grow its
-        # block table first. Never fails — admission committed the whole
-        # budget, so the blocks are guaranteed to be available.
-        for slot in np.nonzero(mask)[0]:
-            pool.ensure_rows(int(slot), int(pool.positions[slot]) + 1)
         logits, pool.caches = self._decode(
             self.params, tokens, pool.caches, positions, jnp.asarray(mask),
             pool.tables_device(),
@@ -807,6 +1019,8 @@ class ServeEngine:
         policed here, before the action is chosen — an expired request's
         slot (and blocks) are free by the time admission is priced."""
         self._expire_deadlines()
+        if self.prefix_sharing:
+            self._maybe_preempt_for_admission()
         kind, req = self.sched.next_action(
             self.pool.n_active, self.pool.n_free, self._can_admit
         )

@@ -738,6 +738,8 @@ class Frontend:
             "migrations": self.migrations,
             "ticket_rejects": self.ticket_rejects,
             "cancelled_copies": sum(s.cancelled_requests for s in eng),
+            "preemptions": sum(s.preempted_requests for s in eng),
+            "prefix_hits": sum(s.prefix_hits for s in eng),
             "generated_tokens": sum(s.generated_tokens for s in eng),
             "p50_latency": float(np.percentile(lats, 50)) if lats else np.nan,
             "p99_latency": float(np.percentile(lats, 99)) if lats else np.nan,

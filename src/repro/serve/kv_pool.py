@@ -36,6 +36,26 @@ Invariants (tested in tests/test_serve.py):
   * ``defrag()`` compacts active slots to the lowest indices, gathering
     only contiguous leaves — paged leaves never move (block tables are
     host arrays), so for pure-attention families it is a device no-op.
+
+Copy-on-write prefix sharing (``prefix_sharing=True``, DESIGN.md §16):
+every block carries a REFCOUNT = the number of slot tables referencing
+it. A :class:`PrefixIndex` trie maps full-block prompt prefixes to
+resident blocks so a new request ADOPTS a matching chain instead of
+recomputing it (refcount++ per block, vLLM/TGI block-table idiom), and
+any write into a block with refcount > 1 must FORK it first — a fresh
+block, a device copy (``slot_block_copy``), and a table swap, so the
+writer scatters into a private clone while readers keep the original.
+Sharing replaces the commit-at-admission guarantee: ``append``/``fork``
+can now raise :class:`ArenaExhausted`, and the ENGINE answers arena
+pressure by preempt-and-requeue instead of queuing at admission.
+Invariants (tested in tests/test_prefix.py, randomized):
+  * refcount[b] == number of live table references to b, for every b;
+  * a block written through a slot's table has refcount 1 (no block is
+    doubly owned by writers — shared blocks are read-only until forked);
+  * a freed block returns to the free list exactly once, when its LAST
+    reference drops (free ∪ referenced == {1..num_blocks}, disjoint);
+  * ``used_high_water`` tracks the max of UNIQUE live blocks — shared
+    blocks count once, which is the whole memory win.
 """
 
 from __future__ import annotations
@@ -43,7 +63,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -55,13 +75,26 @@ from repro.models.layers import (
     ParamSpec,
     batch_axis_of,
     is_paged_spec,
+    slot_block_copy,
     slot_read,
     slot_reset,
     slot_take,
     slot_write,
 )
 
-__all__ = ["BlockManager", "SlotPool", "SlotSnapshot", "model_scoped_cache"]
+__all__ = [
+    "ArenaExhausted", "BlockManager", "PrefixIndex", "SlotPool",
+    "SlotSnapshot", "model_scoped_cache",
+]
+
+
+class ArenaExhausted(RuntimeError):
+    """A sharing-mode allocation (lazy append or copy-on-write fork)
+    found the free list empty. Never raised in commit-at-admission mode
+    — there the admission-time budget check makes exhaustion impossible.
+    Under prefix sharing the engine catches this and preempts the
+    cheapest lane (recompute-vs-hold priced by the CostModel) instead of
+    stalling."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -122,7 +155,85 @@ def _pool_ops(model, n_slots: int, max_len: int,
         jax.jit(lambda c, s, v: slot_write(c, specs, s, v)),
         jax.jit(lambda c, s: slot_reset(c, specs, s)),
         jax.jit(lambda c, p: slot_take(c, specs, p)),
+        jax.jit(lambda c, s, d: slot_block_copy(c, specs, s, d)),
     )
+
+
+class _TrieNode:
+    __slots__ = ("key", "bid", "parent", "children")
+
+    def __init__(self, key, bid, parent):
+        self.key = key          # tuple of block_size tokens (root: None)
+        self.bid = bid          # arena block holding these rows (root: None)
+        self.parent = parent
+        self.children: Dict[tuple, "_TrieNode"] = {}
+
+
+class PrefixIndex:
+    """Radix-style trie over FULL prompt blocks: each node is one
+    ``block_size``-token chunk, its path from the root is the full token
+    prefix, and its payload is the resident arena block holding exactly
+    those rows. Consulted at admission: the longest root chain matching
+    a new prompt is adopted into the request's block table (refcount++)
+    instead of being recomputed.
+
+    Only full PROMPT blocks are registered (generated tokens never are —
+    they are private to their stream), and a node dies the moment its
+    block's last reference drops (``forget``, driven by the pool's
+    ``free``). Because adopters always take whole root chains, a live
+    descendant implies live ancestors, so eviction only ever removes
+    reachable leaves — the trie never dangles."""
+
+    def __init__(self, block_size: int):
+        self.block_size = block_size
+        self.root = _TrieNode(None, None, None)
+        self._by_bid: Dict[int, _TrieNode] = {}
+
+    def __len__(self) -> int:
+        return len(self._by_bid)
+
+    def _chunks(self, tokens) -> List[tuple]:
+        toks = [int(t) for t in tokens]
+        bs = self.block_size
+        return [tuple(toks[i: i + bs])
+                for i in range(0, len(toks) - len(toks) % bs, bs)]
+
+    def match(self, tokens) -> List[int]:
+        """Block ids of the longest resident full-block prefix of
+        ``tokens`` (root-down chain; possibly empty)."""
+        node, bids = self.root, []
+        for key in self._chunks(tokens):
+            node = node.children.get(key)
+            if node is None:
+                break
+            bids.append(node.bid)
+        return bids
+
+    def register(self, tokens, bids: Sequence[int]) -> int:
+        """Record that ``bids[k]`` holds the k-th full block of
+        ``tokens``. Chunks already present keep their incumbent block
+        (two identical prompts racing through prefill both finish; the
+        first registration wins and the loser's blocks stay private).
+        Returns how many NEW nodes were created."""
+        node, created = self.root, 0
+        for key, bid in zip(self._chunks(tokens), bids):
+            child = node.children.get(key)
+            if child is None:
+                child = _TrieNode(key, int(bid), node)
+                node.children[key] = child
+                self._by_bid[int(bid)] = child
+                created += 1
+            node = child
+        return created
+
+    def forget(self, bid: int) -> None:
+        """Evict the node holding ``bid`` (called when the block's last
+        reference drops and it returns to the free list)."""
+        node = self._by_bid.pop(int(bid), None)
+        if node is None:
+            return
+        if node.parent is not None and node.parent.children.get(node.key) is node:
+            del node.parent.children[node.key]
 
 
 class BlockManager:
@@ -142,10 +253,20 @@ class BlockManager:
         at a time, as rows are actually written. The used high-water
         therefore tracks LIVE tokens, not reserved budgets — the number
         an allocator would really need co-resident.
+
+    With ``sharing=True`` the arena-level half of the commit guarantee
+    is traded away for copy-on-write prefix sharing: ``adopt`` maps a
+    slot's table onto already-resident blocks (refcount++), ``fork``
+    clones a shared block into the writer's table before a write, and
+    ``append``/``fork`` raise :class:`ArenaExhausted` instead of being
+    deadlock-free by construction — the engine's preempt-and-requeue
+    path is the eviction valve. ``refcount`` is maintained in BOTH modes
+    (legacy blocks simply never exceed 1), so the conservation oracle
+    ``sum(refcounts) == live table references`` holds fleet-wide.
     """
 
     def __init__(self, n_slots: int, n_rows: int, block_size: int,
-                 num_blocks: int):
+                 num_blocks: int, *, sharing: bool = False):
         if n_rows % block_size:
             raise ValueError(
                 f"block_size={block_size} must divide the (aligned) cache "
@@ -153,13 +274,19 @@ class BlockManager:
             )
         self.block_size = block_size
         self.num_blocks = num_blocks
+        self.sharing = bool(sharing)
         self.table_width = n_rows // block_size
         #: (n_slots, T) int32 arena indices; NULL_BLOCK marks unallocated.
         self.tables = np.full((n_slots, self.table_width), NULL_BLOCK, np.int32)
         # LIFO free list over ids 1..num_blocks (0 is the sink).
         self._free: List[int] = list(range(num_blocks, 0, -1))
+        #: per-slot referenced block ids in table order. Under sharing a
+        #: block adopted by several slots appears in each slot's list —
+        #: "referenced", not exclusively owned.
         self._owned: List[List[int]] = [[] for _ in range(n_slots)]
         self._budget: List[int] = [0] * n_slots   # committed blocks per slot
+        #: refcount[bid] = number of live table references to bid.
+        self.refcount = np.zeros(num_blocks + 1, np.int32)
         self.used_high_water = 0
 
     # -- accounting ----------------------------------------------------------
@@ -182,23 +309,29 @@ class BlockManager:
         """Admission test: the request's whole budget must fit beside
         every already-committed budget (worst-case accounting — this is
         what guarantees decode-time appends can never exhaust the
-        arena), and inside one slot's table."""
+        arena), and inside one slot's table. Under sharing the arena-sum
+        half is dropped — admission is priced by the engine against live
+        free blocks, with preemption as the pressure valve."""
         need = self.blocks_for(n_tokens)
-        return (need <= self.table_width
-                and self.n_committed_blocks + need <= self.num_blocks)
+        if need > self.table_width:
+            return False
+        return self.sharing or self.n_committed_blocks + need <= self.num_blocks
 
     # -- commit / append / free ----------------------------------------------
     def commit(self, slot: int, n_tokens: int) -> None:
         """Charge ``slot``'s lifetime token budget against the arena (no
         blocks move yet). Raises when over-committed — callers gate
-        admission on :meth:`can_commit`."""
+        admission on :meth:`can_commit`. Sharing mode keeps the budget
+        as a per-slot table-width cap only (the arena-sum guarantee is
+        what sharing trades for multiplied occupancy)."""
         need = self.blocks_for(n_tokens)
         if need > self.table_width:
             raise ValueError(
                 f"{n_tokens} tokens need {need} blocks > table width "
                 f"{self.table_width} (slot capacity)"
             )
-        if self.n_committed_blocks - self._budget[slot] + need > self.num_blocks:
+        if (not self.sharing and self.n_committed_blocks - self._budget[slot]
+                + need > self.num_blocks):
             raise ValueError(
                 f"arena over-committed: budget {need} blocks on top of "
                 f"{self.n_committed_blocks - self._budget[slot]} committed "
@@ -209,7 +342,10 @@ class BlockManager:
     def append(self, slot: int, n_rows: int) -> None:
         """Grow ``slot``'s table to physically cover ``n_rows`` rows
         (append-only; no-op when covered). Never exceeds the slot's
-        committed budget — which also makes exhaustion impossible."""
+        committed budget. In commit-at-admission mode exhaustion is
+        impossible by construction; under sharing an empty free list
+        raises :class:`ArenaExhausted` for the engine's preemption
+        path."""
         want = self.blocks_for(n_rows)
         owned = self._owned[slot]
         if want > self._budget[slot]:
@@ -217,22 +353,94 @@ class BlockManager:
                 f"slot {slot}: {n_rows} rows need {want} blocks > "
                 f"committed budget {self._budget[slot]}"
             )
-        while len(owned) < want:
-            bid = self._free.pop()
+        # try/finally: exhaustion mid-append keeps partial progress (the
+        # engine preempts and retries), so high-water must cover it too.
+        try:
+            while len(owned) < want:
+                if not self._free:
+                    raise ArenaExhausted(
+                        f"slot {slot} needs {want - len(owned)} more block(s) "
+                        f"but the arena free list is empty"
+                    )
+                bid = self._free.pop()
+                self.tables[slot, len(owned)] = bid
+                owned.append(bid)
+                self.refcount[bid] = 1
+        finally:
+            self.used_high_water = max(self.used_high_water, self.n_used_blocks)
+
+    # -- sharing: adopt / fork / writability ---------------------------------
+    def adopt(self, slot: int, bids: Sequence[int]) -> None:
+        """Map an empty slot's table prefix onto already-resident blocks
+        (a trie match at admission): refcount++ per block, no device
+        work. The adopted chain must fit the slot's committed budget —
+        the prompt prefix always does."""
+        if not self.sharing:
+            raise ValueError("adopt requires a sharing-mode manager")
+        owned = self._owned[slot]
+        if owned:
+            raise ValueError(f"slot {slot} must adopt before any append")
+        if len(bids) > self._budget[slot]:
+            raise ValueError(
+                f"adopting {len(bids)} blocks exceeds slot {slot}'s "
+                f"budget {self._budget[slot]}"
+            )
+        for bid in bids:
+            bid = int(bid)
+            if not (NULL_BLOCK < bid <= self.num_blocks) or self.refcount[bid] < 1:
+                raise ValueError(f"cannot adopt non-resident block {bid}")
             self.tables[slot, len(owned)] = bid
             owned.append(bid)
-        self.used_high_water = max(self.used_high_water, self.n_used_blocks)
+            self.refcount[bid] += 1
 
-    def free(self, slot: int) -> None:
-        """Return every block of ``slot`` to the pool instantly, release
-        its budget commitment, and point its table at the NULL sink
-        (stale rows are never read again: reads mask by length, and
-        reallocation overwrites)."""
+    def is_shared(self, bid: int) -> bool:
+        return self.refcount[int(bid)] > 1
+
+    def fork(self, slot: int, block_index: int) -> Tuple[int, int]:
+        """Copy-on-write: give ``slot`` a private clone of the shared
+        block at ``block_index`` of its table. Pops a fresh block (raises
+        :class:`ArenaExhausted` when none is free), swaps the table
+        entry, and moves one reference count over. Returns
+        ``(src_bid, dst_bid)`` so the pool can device-copy the rows —
+        the host swap MUST be paired with that copy before any write."""
+        if not self.sharing:
+            raise ValueError("fork requires a sharing-mode manager")
         owned = self._owned[slot]
-        self._free.extend(reversed(owned))
+        if not (0 <= block_index < len(owned)):
+            raise ValueError(f"slot {slot} has no block at {block_index}")
+        src = owned[block_index]
+        if self.refcount[src] < 2:
+            raise ValueError(f"block {src} is not shared — nothing to fork")
+        if not self._free:
+            raise ArenaExhausted(
+                f"fork of shared block {src} needs a free block"
+            )
+        dst = self._free.pop()
+        self.refcount[src] -= 1
+        self.refcount[dst] = 1
+        self.tables[slot, block_index] = dst
+        owned[block_index] = dst
+        self.used_high_water = max(self.used_high_water, self.n_used_blocks)
+        return src, dst
+
+    def free(self, slot: int) -> List[int]:
+        """Drop every reference ``slot`` holds, release its budget, and
+        point its table at the NULL sink. A block returns to the free
+        list exactly when its LAST reference drops; the released ids are
+        returned so the pool can evict them from the prefix index.
+        (Stale rows are never read again: reads mask by length, and
+        reallocation overwrites.)"""
+        owned = self._owned[slot]
+        released: List[int] = []
+        for bid in reversed(owned):
+            self.refcount[bid] -= 1
+            if self.refcount[bid] == 0:
+                self._free.append(bid)
+                released.append(bid)
         owned.clear()
         self._budget[slot] = 0
         self.tables[slot, :] = NULL_BLOCK
+        return released
 
     def permute(self, order: np.ndarray) -> None:
         """Remap slot indices (pool defrag) — pure host bookkeeping."""
@@ -240,28 +448,57 @@ class BlockManager:
         self._owned = [self._owned[int(o)] for o in order]
         self._budget = [self._budget[int(o)] for o in order]
 
+    def audit(self) -> List[str]:
+        """Every allocator-invariant violation as a message list (empty
+        = healthy). Non-throwing twin of :meth:`check` so the chaos
+        harness can use it as an oracle (block conservation under
+        sharing) without turning bookkeeping bugs into crashes."""
+        errs: List[str] = []
+        refs: Dict[int, int] = {}
+        for slot, owned in enumerate(self._owned):
+            if len(owned) > self._budget[slot]:
+                errs.append(f"slot {slot} holds {len(owned)} blocks over "
+                            f"its budget {self._budget[slot]}")
+            if list(self.tables[slot, : len(owned)]) != owned:
+                errs.append(f"slot {slot} table/owned mismatch")
+            if any(t != NULL_BLOCK for t in self.tables[slot, len(owned):]):
+                errs.append(f"slot {slot} has table entries past its "
+                            "referenced blocks")
+            for b in owned:
+                if not (NULL_BLOCK < b <= self.num_blocks):
+                    errs.append(f"bad block id {b}")
+                    continue
+                refs[b] = refs.get(b, 0) + 1
+        for b, n in refs.items():
+            if int(self.refcount[b]) != n:
+                errs.append(f"block {b}: refcount {int(self.refcount[b])} "
+                            f"!= {n} live table references")
+            if not self.sharing and n > 1:
+                errs.append(f"block {b} owned twice")
+        free = set(self._free)
+        if len(free) != len(self._free):
+            errs.append("duplicate ids in free list")
+        if not free.isdisjoint(refs):
+            errs.append("block both free and referenced")
+        if free | set(refs) != set(range(1, self.num_blocks + 1)):
+            errs.append("leaked blocks: free + referenced != capacity")
+        for b in self._free:
+            if int(self.refcount[b]) != 0:
+                errs.append(f"free block {b} carries refcount "
+                            f"{int(self.refcount[b])}")
+        if not self.sharing and self.n_committed_blocks > self.num_blocks:
+            errs.append("over-committed")
+        if self.n_used_blocks != len(refs):
+            errs.append(f"used {self.n_used_blocks} != {len(refs)} unique "
+                        "live blocks")
+        if self.used_high_water < self.n_used_blocks:
+            errs.append("high-water below current unique live blocks")
+        return errs
+
     def check(self) -> None:
         """Assert allocator invariants (test hook)."""
-        seen: set = set()
-        for slot, owned in enumerate(self._owned):
-            assert len(owned) <= self._budget[slot], (
-                f"slot {slot} owns {len(owned)} blocks over its budget"
-            )
-            assert list(self.tables[slot, : len(owned)]) == owned, (
-                f"slot {slot} table/owned mismatch"
-            )
-            assert all(t == NULL_BLOCK for t in self.tables[slot, len(owned):]), (
-                f"slot {slot} has table entries past its owned blocks"
-            )
-            for b in owned:
-                assert NULL_BLOCK < b <= self.num_blocks, f"bad block id {b}"
-                assert b not in seen, f"block {b} owned twice"
-                seen.add(b)
-        assert self.n_committed_blocks <= self.num_blocks, "over-committed"
-        free = set(self._free)
-        assert len(free) == len(self._free), "duplicate ids in free list"
-        assert free.isdisjoint(seen), "block both free and owned"
-        assert free | seen == set(range(1, self.num_blocks + 1)), "leaked blocks"
+        errs = self.audit()
+        assert not errs, "; ".join(errs)
 
 
 class SlotPool:
@@ -273,28 +510,45 @@ class SlotPool:
         *,
         block_size: Optional[int] = None,
         arena_blocks: Optional[int] = None,
+        prefix_sharing: bool = False,
     ):
         """``block_size`` switches sequence-axis cache leaves to a paged
         arena of ``arena_blocks`` blocks (default: full capacity,
         ``n_slots * rows / block_size`` — undersize it to serve under an
-        explicit memory budget with admit-by-budget queuing)."""
+        explicit memory budget with admit-by-budget queuing).
+
+        ``prefix_sharing`` (paged only) turns on copy-on-write block
+        sharing: a :class:`PrefixIndex` trie over resident full prompt
+        blocks lets new requests adopt matching chains at admission, and
+        :meth:`ensure_writable` forks shared blocks before any write.
+        Allocation can then raise :class:`ArenaExhausted` — callers must
+        run a preemption policy (the engine does)."""
         if n_slots < 1:
             raise ValueError("need at least one slot")
+        if prefix_sharing and block_size is None:
+            raise ValueError("prefix_sharing requires a paged pool "
+                             "(block_size set)")
         self.n_slots = n_slots
         self.max_len = max_len
         self.rows = round_kv_len(max_len)   # aligned per-slot row capacity
         self.block_size = block_size
         self.paged = block_size is not None
+        self.prefix_sharing = bool(prefix_sharing)
         if self.paged:
             if arena_blocks is None:
                 arena_blocks = n_slots * math.ceil(self.rows / block_size)
             self.manager: Optional[BlockManager] = BlockManager(
-                n_slots, self.rows, block_size, arena_blocks
+                n_slots, self.rows, block_size, arena_blocks,
+                sharing=self.prefix_sharing,
             )
         else:
             arena_blocks = 0
             self.manager = None
-        self.specs, self._read, self._write, self._reset, self._take = _pool_ops(
+        self.prefix: Optional[PrefixIndex] = (
+            PrefixIndex(block_size) if self.prefix_sharing else None
+        )
+        (self.specs, self._read, self._write, self._reset, self._take,
+         self._copy) = _pool_ops(
             model, n_slots, max_len, block_size, arena_blocks
         )
         self.caches = model.blank_caches(
@@ -366,7 +620,79 @@ class SlotPool:
         self.owner[slot] = None
         self.positions[slot] = 0
         if self.paged:
-            self.manager.free(slot)
+            released = self.manager.free(slot)
+            if self.prefix is not None:
+                for bid in released:
+                    self.prefix.forget(bid)
+
+    # -- prefix sharing (copy-on-write) --------------------------------------
+    def adopt_prefix(self, slot: int, prompt) -> int:
+        """Map ``slot``'s table onto the longest resident full-block
+        prefix of ``prompt`` (refcount++, zero device work). Returns the
+        number of cache ROWS adopted — the engine skips prefill compute
+        for exactly those rows.
+
+        Returns 0 for pools with ANY contiguous leaf: recurrent state
+        (xLSTM/Mamba2 lanes) is a running function of every token, so a
+        mid-stream block chain cannot stand in for the skipped compute —
+        those families keep preemption but not sharing."""
+        if self.prefix is None or self._any_contiguous:
+            return 0
+        bids = self.prefix.match(prompt)
+        if not bids:
+            return 0
+        self.manager.adopt(slot, bids)
+        rows = len(bids) * self.block_size
+        self.positions[slot] = rows
+        return rows
+
+    def register_prefix(self, slot: int, prompt) -> int:
+        """Publish ``slot``'s full PROMPT blocks into the trie once its
+        prefill completed (generated tokens stay private). No-op for
+        non-sharing pools and recurrent hybrids. Returns new trie nodes."""
+        if self.prefix is None or self._any_contiguous:
+            return 0
+        n_full = len(prompt) // self.block_size
+        owned = self.manager._owned[slot][:n_full]
+        return self.prefix.register(prompt, owned)
+
+    def match_resident(self, prompt, exclude_slot: Optional[int] = None) -> int:
+        """Rows of ``prompt`` that would still be trie-resident if
+        ``exclude_slot`` dropped its references — what a preempted
+        request could re-adopt on replay, used by the engine to price
+        recompute-from-longest-prefix. The chain is cut at the first
+        block that would die with the excluded slot."""
+        if self.prefix is None or self._any_contiguous:
+            return 0
+        excl: List[int] = ([] if exclude_slot is None
+                           else self.manager._owned[exclude_slot])
+        rows = 0
+        for bid in self.prefix.match(prompt):
+            survives = int(self.manager.refcount[bid])
+            survives -= excl.count(bid)
+            if survives < 1:
+                break
+            rows += self.block_size
+        return rows
+
+    def ensure_writable(self, slot: int, row_start: int, row_end: int) -> None:
+        """Copy-on-write gate: fork every SHARED block backing rows
+        ``[row_start, row_end)`` of ``slot`` into private clones (host
+        table swap + device block copy) so the upcoming scatter cannot
+        be observed by other sharers. Cheap host no-op when nothing in
+        range is shared. May raise :class:`ArenaExhausted`."""
+        if self.prefix is None or row_end <= row_start:
+            return
+        mgr = self.manager
+        owned = mgr._owned[slot]
+        lo = row_start // self.block_size
+        hi = min((row_end - 1) // self.block_size, len(owned) - 1)
+        for idx in range(lo, hi + 1):
+            if mgr.refcount[owned[idx]] > 1:
+                src, dst = mgr.fork(slot, idx)
+                self.caches = self._copy(
+                    self.caches, jnp.int32(src), jnp.int32(dst)
+                )
 
     # -- paged bookkeeping ---------------------------------------------------
     def tables_device(self, slot: Optional[int] = None) -> Optional[jax.Array]:
@@ -492,7 +818,14 @@ class SlotPool:
         if slot is None:
             return None
         if self.paged and snap.n_blocks:
-            self.manager.append(slot, snap.n_blocks * self.block_size)
+            try:
+                self.manager.append(slot, snap.n_blocks * self.block_size)
+            except ArenaExhausted:
+                # Sharing-mode arena too full to land the migration right
+                # now — report "busy" (None) like a full pool; the caller
+                # requeues and local preemption will open space.
+                self.free(slot)
+                return None
             dest_ids = jnp.asarray(
                 self.manager._owned[slot][: snap.n_blocks], jnp.int32
             )

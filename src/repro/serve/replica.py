@@ -74,6 +74,7 @@ class Replica:
         cost: Optional[CostModel] = None,
         block_size: Optional[int] = None,
         arena_blocks: Optional[int] = None,
+        prefix_sharing: bool = False,
         prefill_chunk: Optional[int] = None,
         decode_per_prefill: int = 4,
         prefill_bucket: int = 16,
@@ -92,6 +93,7 @@ class Replica:
             n_slots=n_slots, max_len=max_len, scheduler=sched,
             prefill_bucket=prefill_bucket,
             block_size=block_size, arena_blocks=arena_blocks,
+            prefix_sharing=prefix_sharing,
             obs=obs, obs_name=f"replica {self.id}",
         )
         self.alive = True

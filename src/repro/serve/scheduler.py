@@ -74,6 +74,25 @@ class Request:
         return int(self.prompt.shape[0])
 
     @property
+    def prefill_len(self) -> int:
+        """Tokens the next prefill phase must put in cache. A fresh
+        request prefills its prompt; a PREEMPTED request replays prompt
+        plus every already-emitted token except the last (that one is
+        re-derived by the first decode tick from the replayed state, so
+        the resumed stream stays byte-identical). Stable across the
+        chunked phases of one prefill: ``tokens`` only grows during
+        decode."""
+        return self.prompt_len + max(len(self.tokens) - 1, 0)
+
+    def prefill_target(self) -> np.ndarray:
+        """The exact token sequence prefill feeds — see ``prefill_len``."""
+        if not self.tokens:
+            return self.prompt
+        return np.concatenate([
+            self.prompt, np.asarray(self.tokens[:-1], self.prompt.dtype)
+        ])
+
+    @property
     def cancelled(self) -> bool:
         return self.t_cancelled is not None
 
@@ -119,6 +138,18 @@ class CostModel:
     def verify(self, n_tokens: int) -> float:
         """One batched verify call scoring ``n_tokens`` positions/lane."""
         return self.decode_tick + self.verify_per_token * n_tokens
+
+    # -- preemption economics (DESIGN.md §16) --------------------------------
+    def recompute(self, n_tokens: int) -> float:
+        """Price of evicting a lane and replaying ``n_tokens`` of prefix
+        later (prefill from the longest still-resident prefix) — the
+        paper's "recompute" arm of the wait-vs-recompute trade."""
+        return self.prefill(n_tokens) if n_tokens > 0 else 0.0
+
+    def hold(self, remaining_tokens: int) -> float:
+        """Price of keeping a lane's blocks pinned until it finishes on
+        its own: the decode ticks it still needs — the "wait" arm."""
+        return self.decode_tick * max(int(remaining_tokens), 0)
 
     def spec_round(
         self, draft_ticks: int, verify_tokens: int, replay: bool = False
@@ -249,12 +280,30 @@ class Scheduler:
 
     # -- engine callbacks ----------------------------------------------------
     def chunk_for(self, req: Request) -> Tuple[int, int]:
-        """(start, n_tokens) of the next prefill chunk for ``req``."""
+        """(start, n_tokens) of the next prefill chunk for ``req`` —
+        measured against ``prefill_len`` so a preempted request's replay
+        (prompt + emitted tokens) chunks exactly like a long prompt."""
         start = req.prefilled
-        remaining = req.prompt_len - start
+        remaining = req.prefill_len - start
         if self.prefill_chunk is None:
             return start, remaining
         return start, min(self.prefill_chunk, remaining)
+
+    def requeue(self, req: Request) -> None:
+        """Put a PREEMPTED request back in the arrival queue: its slot
+        and blocks were taken, its emitted tokens are kept, and its next
+        admission replays from the longest still-resident prefix.
+        ``arrival`` is deliberately unchanged — the victim's eventual
+        latency honestly includes the eviction (no p99 laundering) and
+        FIFO order re-admits it first, which with the preemptor's
+        completed progress rules out livelock."""
+        if req in self.running:
+            self.running.remove(req)
+        req.prefilled = 0
+        req.t_admit = None
+        self.waiting.append(req)
+        self.waiting.sort(key=lambda r: (r.arrival, r.rid))
+        self._g_depth.set(len(self.waiting))
 
     def on_admit(self, req: Request) -> None:
         self.waiting.remove(req)

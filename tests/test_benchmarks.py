@@ -17,6 +17,38 @@ def test_timer_uses_perf_counter(monkeypatch):
     assert t.elapsed > 0.0
 
 
+def test_bench_index_requires_registered_files(tmp_path):
+    from benchmarks.common import write_bench_index, write_bench_json
+
+    write_bench_json(str(tmp_path / "BENCH_a.json"),
+                     {"benchmark": "a", "mode": "fast"})
+
+    # Unrequired files index best-effort; extras are fine.
+    idx = write_bench_index(str(tmp_path))
+    assert [e["file"] for e in idx["benchmarks"]] == ["BENCH_a.json"]
+    assert (tmp_path / "BENCH_index.json").exists()
+
+    # A registered bench whose JSON is missing fails loudly.
+    try:
+        write_bench_index(str(tmp_path),
+                          required=("BENCH_a.json", "BENCH_b.json"))
+        raise AssertionError("missing required bench did not raise")
+    except RuntimeError as e:
+        assert "BENCH_b.json: missing" in str(e)
+
+    # ... and so does a corrupt one (silent skip would drop it).
+    (tmp_path / "BENCH_b.json").write_text("{not json")
+    try:
+        write_bench_index(str(tmp_path), required=("BENCH_b.json",))
+        raise AssertionError("corrupt required bench did not raise")
+    except RuntimeError as e:
+        assert "BENCH_b.json: unreadable" in str(e)
+
+    # Unrequired corrupt files still skip quietly (best-effort index).
+    idx = write_bench_index(str(tmp_path))
+    assert [e["file"] for e in idx["benchmarks"]] == ["BENCH_a.json"]
+
+
 def test_run_jsonable_roundtrip():
     from benchmarks.run import _jsonable
 

@@ -1,0 +1,546 @@
+"""Copy-on-write prefix sharing + preempt-and-requeue (DESIGN.md §16).
+
+Two layers of defense:
+
+1. A RANDOMIZED arena-invariant machine: thousands of random
+   admit/append/adopt/fork/free/preempt sequences against BlockManager,
+   checked after EVERY op against an independent host mirror:
+     * refcount[b] == live table references to b, for every block;
+     * no block is doubly owned by writers (a write target has
+       refcount 1 — shared blocks are read-only until forked);
+     * a freed block returns to the free list EXACTLY once, when its
+       last reference drops (free ∪ referenced == {1..N}, disjoint);
+     * ``used_high_water`` == running max of UNIQUE live blocks.
+   (Runs through tests/_hypo.py: real hypothesis when installed, seeded
+   random fallback otherwise.)
+
+2. Byte-identity pins: shared-prefix and preempted-then-requeued
+   requests emit token streams identical to a solo offline decode across
+   all four model families — sharing and preemption are memory/latency
+   moves, never math changes — including preemption racing an in-flight
+   hedge copy at the frontend.
+
+Failure-semantics clauses pinned here are cross-linked from
+docs/serving.md ("Prefix sharing + preemption").
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from _hypo import given, settings, st
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serve import (
+    ArenaExhausted,
+    BlockManager,
+    Frontend,
+    PrefixIndex,
+    Replica,
+    Scheduler,
+    ServeEngine,
+    generate_offline,
+)
+from repro.core.delay_models import SimplifiedDelayModel
+
+RNG = jax.random.PRNGKey(0)
+MAX_LEN = 64
+ARCHS = ["smollm-135m", "deepseek-v3", "xlstm-125m", "zamba2"]
+DELAY = SimplifiedDelayModel(lambda_y=2.0)
+
+
+def _model(arch):
+    cfg = get_config(arch).reduced()
+    if cfg.moe is not None:
+        # Prefix sharing changes suffix-prefill token counts; only
+        # dropless (inference-mode) routing is chunk-geometry-invariant.
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, dropless=True)
+        )
+    model = build_model(cfg)
+    return model, model.init(RNG)
+
+
+# ---------------------------------------------------------------------------
+# Layer 1: randomized arena-invariant machine (host-only, no jax)
+# ---------------------------------------------------------------------------
+
+class _Mirror:
+    """Independent reference model of the refcounted arena: per-slot
+    block lists + a bid->refcount dict, plus a ledger counting how many
+    times each bid entered the free list (must equal times allocated)."""
+
+    def __init__(self, n_slots, num_blocks):
+        self.tables = [[] for _ in range(n_slots)]
+        self.ref = {}
+        self.num_blocks = num_blocks
+        self.freed_count = {b: 1 for b in range(1, num_blocks + 1)}
+        self.alloc_count = {b: 0 for b in range(1, num_blocks + 1)}
+        self.high_water = 0
+
+    def note_alloc(self, bid):
+        self.alloc_count[bid] += 1
+
+    def note_free(self, bid):
+        self.freed_count[bid] += 1
+
+    def touch_high_water(self):
+        self.high_water = max(self.high_water, len(self.ref))
+
+    def check_against(self, mgr: BlockManager):
+        errs = mgr.audit()
+        assert errs == [], errs
+        # refcounts == live table references (vs OUR book, not mgr's)
+        refs = {}
+        for t in self.tables:
+            for b in t:
+                refs[b] = refs.get(b, 0) + 1
+        assert refs == self.ref
+        for b in range(1, self.num_blocks + 1):
+            assert int(mgr.refcount[b]) == self.ref.get(b, 0), b
+        # every block's tables match the manager's
+        for s, t in enumerate(self.tables):
+            assert mgr._owned[s] == t, f"slot {s}"
+        # freed exactly once per allocation (ledger balance): a block is
+        # either live (allocated one more time than freed) or free
+        # (balanced) — never freed twice for one allocation.
+        for b in range(1, self.num_blocks + 1):
+            live = 1 if b in self.ref else 0
+            assert self.alloc_count[b] + 1 - self.freed_count[b] == live, b
+        # high-water == running max of unique live blocks
+        assert mgr.used_high_water == self.high_water
+
+
+def _random_machine(seed, n_slots=4, num_blocks=12, block_size=4, n_ops=150):
+    rng = np.random.default_rng(seed)
+    rows = num_blocks * block_size          # table wide enough for all
+    mgr = BlockManager(n_slots, rows, block_size, num_blocks, sharing=True)
+    mir = _Mirror(n_slots, num_blocks)
+    active = set()
+
+    for _ in range(n_ops):
+        op = rng.choice(["admit", "append", "adopt", "fork", "free"])
+        if op == "admit" and len(active) < n_slots:
+            slot = int(rng.choice([s for s in range(n_slots)
+                                   if s not in active]))
+            mgr.commit(slot, rows)          # table-width budget
+            active.add(slot)
+        elif op == "append" and active:
+            slot = int(rng.choice(sorted(active)))
+            want = len(mgr._owned[slot]) * block_size + int(
+                rng.integers(1, 2 * block_size)
+            )
+            if mgr.blocks_for(want) > mgr.table_width:
+                continue
+            try:
+                before = list(mgr._owned[slot])
+                mgr.append(slot, want)
+            except ArenaExhausted:
+                assert mgr.n_free_blocks == 0
+            fresh = mgr._owned[slot][len(before):]
+            for b in fresh:
+                mir.note_alloc(b)
+                mir.ref[b] = 1
+                mir.tables[slot].append(b)
+            mir.touch_high_water()
+        elif op == "adopt" and active:
+            # adopt another slot's chain into a fresh slot
+            free_slots = [s for s in range(n_slots) if s not in active]
+            donors = [s for s in active if mgr._owned[s]]
+            if not free_slots or not donors:
+                continue
+            slot = int(rng.choice(free_slots))
+            donor = int(rng.choice(donors))
+            k = int(rng.integers(1, len(mgr._owned[donor]) + 1))
+            chain = list(mgr._owned[donor][:k])
+            mgr.commit(slot, rows)
+            mgr.adopt(slot, chain)
+            active.add(slot)
+            for b in chain:
+                mir.ref[b] += 1
+                mir.tables[slot].append(b)
+            mir.touch_high_water()
+        elif op == "fork" and active:
+            cands = [
+                (s, i)
+                for s in active
+                for i, b in enumerate(mgr._owned[s])
+                if mgr.refcount[b] > 1
+            ]
+            if not cands:
+                continue
+            slot, idx = cands[int(rng.integers(len(cands)))]
+            try:
+                src, dst = mgr.fork(slot, idx)
+            except ArenaExhausted:
+                assert mgr.n_free_blocks == 0
+                continue
+            mir.ref[src] -= 1
+            mir.note_alloc(dst)
+            mir.ref[dst] = 1
+            mir.tables[slot][idx] = dst
+            mir.touch_high_water()
+            # the writer's block is now exclusively its own
+            assert not mgr.is_shared(dst)
+        elif op == "free" and active:     # free == preempt at this layer
+            slot = int(rng.choice(sorted(active)))
+            released = mgr.free(slot)
+            active.discard(slot)
+            for b in mir.tables[slot]:
+                mir.ref[b] -= 1
+                if mir.ref[b] == 0:
+                    del mir.ref[b]
+                    mir.note_free(b)
+                    assert b in released
+            assert all(mir.ref.get(b, 0) == 0 for b in released)
+            mir.tables[slot] = []
+        mir.check_against(mgr)
+
+    for slot in sorted(active):
+        released = mgr.free(slot)
+        for b in mir.tables[slot]:
+            mir.ref[b] -= 1
+            if mir.ref[b] == 0:
+                del mir.ref[b]
+                mir.note_free(b)
+        mir.tables[slot] = []
+        mir.check_against(mgr)
+    assert mgr.n_free_blocks == num_blocks
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_randomized_arena_invariants(seed):
+    """~4500 random admit/append/adopt/fork/free ops, every one checked
+    against the mirror + the manager's own audit."""
+    _random_machine(seed)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_randomized_arena_invariants_tiny_arena(seed):
+    """Same machine at 5 blocks: constant exhaustion pressure exercises
+    the ArenaExhausted paths on almost every append/fork."""
+    _random_machine(seed, n_slots=3, num_blocks=5, block_size=2, n_ops=120)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_randomized_trie_matches_dict_mirror(seed):
+    """PrefixIndex vs a naive dict of full-block prefixes: identical
+    match results under random register/forget interleavings."""
+    rng = np.random.default_rng(seed)
+    bs = 4
+    trie = PrefixIndex(bs)
+    mirror = {}                 # tuple(chunk path) -> bid
+    live = set()                # bids holding a trie node (matchable or not)
+    next_bid = 1
+    for _ in range(120):
+        if rng.random() < 0.6 or not mirror:
+            toks = list(rng.integers(0, 5, size=int(rng.integers(0, 14))))
+            n_full = len(toks) // bs
+            bids = list(range(next_bid, next_bid + n_full))
+            next_bid += n_full
+            trie.register(toks, bids)
+            path = ()
+            for k in range(n_full):
+                path = path + (tuple(toks[k * bs:(k + 1) * bs]),)
+                if path not in mirror:                # incumbent wins
+                    mirror[path] = bids[k]
+                    live.add(bids[k])
+        else:
+            path = list(mirror)[int(rng.integers(len(mirror)))]
+            bid = mirror[path]
+            trie.forget(bid)
+            live.discard(bid)
+            # forgetting a mid-chain node orphans its descendants from
+            # MATCHING (the walk stops at the detached node) — they keep
+            # their index entries until individually forgotten, exactly
+            # how the pool forgets blocks one at a time as they free.
+            for p in [p for p in mirror if p[:len(path)] == path]:
+                del mirror[p]
+        probe = list(rng.integers(0, 5, size=int(rng.integers(0, 14))))
+        got = trie.match(probe)
+        path, want = (), []
+        for k in range(len(probe) // bs):
+            path = path + (tuple(probe[k * bs:(k + 1) * bs]),)
+            if path not in mirror:
+                break
+            want.append(mirror[path])
+        assert got == want, (probe, got, want)
+    assert len(trie) == len(live)
+
+
+def test_fork_requires_shared_and_exhaustion_raises():
+    mgr = BlockManager(2, 16, 4, 4, sharing=True)
+    mgr.commit(0, 16)
+    mgr.append(0, 8)                        # slot0: 2 blocks
+    with pytest.raises(ValueError):
+        mgr.fork(0, 0)                      # not shared — nothing to fork
+    mgr.commit(1, 16)
+    mgr.adopt(1, mgr._owned[0])
+    mgr.append(0, 16)                       # slot0 grows to 4 blocks: arena full
+    with pytest.raises(ArenaExhausted):
+        mgr.fork(1, 0)                      # shared, but no free block
+    mgr.check()
+
+
+def test_adopt_only_before_append_and_only_resident():
+    mgr = BlockManager(2, 16, 4, 4, sharing=True)
+    mgr.commit(0, 16)
+    mgr.append(0, 4)
+    mgr.commit(1, 16)
+    with pytest.raises(ValueError):
+        mgr.adopt(1, [3])                   # block 3 is not resident
+    mgr.adopt(1, mgr._owned[0])
+    with pytest.raises(ValueError):
+        mgr.adopt(1, mgr._owned[0])         # table no longer empty
+    mgr.check()
+
+
+def test_legacy_mode_never_raises_arena_exhausted():
+    """Commit-at-admission still guarantees exhaustion-free appends —
+    the sharing semantics are strictly opt-in."""
+    mgr = BlockManager(2, 16, 4, 4)
+    assert not mgr.sharing
+    mgr.commit(0, 8)
+    mgr.commit(1, 8)
+    mgr.append(0, 8)
+    mgr.append(1, 8)                        # exactly fills the arena
+    assert mgr.n_free_blocks == 0
+    mgr.check()
+    with pytest.raises(ValueError):
+        mgr.commit(0, 16)                   # over-commit rejected up front
+
+
+def test_audit_reports_instead_of_raising():
+    mgr = BlockManager(1, 16, 4, 4, sharing=True)
+    mgr.commit(0, 16)
+    mgr.append(0, 8)
+    assert mgr.audit() == []
+    bid = mgr._owned[0].pop()               # seed a leak by hand
+    mgr.tables[0, 1] = 0
+    mgr.refcount[bid] -= 1
+    msgs = mgr.audit()
+    assert any("leaked" in m for m in msgs)
+    with pytest.raises(AssertionError):
+        mgr.check()
+
+
+# ---------------------------------------------------------------------------
+# Layer 2: byte-identity pins (all four families)
+# ---------------------------------------------------------------------------
+
+def _shared_prefix_reqs(vocab, shared_len=24, n=6, seed=11):
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(0, vocab, size=shared_len).astype(np.int32)
+    out = []
+    for i in range(n):
+        suf = rng.integers(
+            0, vocab, size=int(rng.integers(2, 6))
+        ).astype(np.int32)
+        out.append((np.concatenate([shared, suf]), 8, i * 0.002))
+    return out
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_shared_prefix_matches_offline(arch):
+    """90%-shared prompts under prefix sharing: every stream identical
+    to solo offline decode. Fully-paged families (smollm, deepseek MLA)
+    must actually share blocks; recurrent hybrids (xlstm, zamba) must
+    NOT (running state cannot stand in for skipped compute) but stay
+    byte-identical through the same engine."""
+    model, params = _model(arch)
+    reqs = _shared_prefix_reqs(model.cfg.vocab_size)
+    eng = ServeEngine(
+        model, params, n_slots=3, max_len=MAX_LEN,
+        scheduler=Scheduler(3, prefill_chunk=8, decode_per_prefill=2),
+        block_size=8, prefix_sharing=True,
+    )
+    rids = [eng.submit(p, m, arrival=a) for p, m, a in reqs]
+    res = eng.run()
+    for rid, (p, m, _) in zip(rids, reqs):
+        ref = generate_offline(model, params, p, m, MAX_LEN)
+        assert res[rid].tokens == ref, f"{arch} rid={rid} diverged"
+    if eng.pool._any_contiguous:
+        assert eng.stats.prefix_hits == 0       # recurrent: preempt-only
+    else:
+        assert eng.stats.prefix_hits > 0
+        assert eng.stats.prefix_rows_shared >= 16
+    eng.pool.manager.check()
+    assert eng.pool.manager.n_used_blocks == 0  # full teardown at drain
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_preempted_requeued_matches_offline(arch):
+    """A 2-slot engine over a 7-block arena (each request wants ~5):
+    sustained pressure forces evictions, and every evicted request's
+    final stream is byte-identical to never having been preempted."""
+    model, params = _model(arch)
+    rng = np.random.default_rng(5)
+    V = model.cfg.vocab_size
+    reqs = []
+    for i in range(4):
+        p = rng.integers(0, V, size=int(rng.integers(18, 30))).astype(np.int32)
+        reqs.append((p, 10, i * 0.001))
+    eng = ServeEngine(
+        model, params, n_slots=2, max_len=MAX_LEN,
+        scheduler=Scheduler(2, prefill_chunk=8, decode_per_prefill=2),
+        block_size=8, arena_blocks=7, prefix_sharing=True,
+    )
+    rids = [eng.submit(p, m, arrival=a) for p, m, a in reqs]
+    res = eng.run()
+    assert eng.stats.preempted_requests > 0, "workload failed to preempt"
+    for rid, (p, m, _) in zip(rids, reqs):
+        ref = generate_offline(model, params, p, m, MAX_LEN)
+        assert res[rid].tokens == ref, f"{arch} rid={rid} diverged"
+    eng.pool.manager.check()
+    assert eng.pool.manager.n_used_blocks == 0
+
+
+@pytest.mark.parametrize("arch", ["smollm-135m", "deepseek-v3"])
+def test_identical_prompts_full_match_refeed(arch):
+    """Block-aligned identical prompts: the adopter matches its WHOLE
+    prompt, so the engine re-feeds the last token through a forked tail
+    block — the one case a prefill write targets a shared block."""
+    model, params = _model(arch)
+    rng = np.random.default_rng(9)
+    p0 = rng.integers(0, model.cfg.vocab_size, size=16).astype(np.int32)
+    eng = ServeEngine(
+        model, params, n_slots=3, max_len=MAX_LEN,
+        scheduler=Scheduler(3, prefill_chunk=8, decode_per_prefill=2),
+        block_size=8, prefix_sharing=True,
+    )
+    r0 = eng.submit(p0, 6, arrival=0.0)
+    r1 = eng.submit(p0, 6, arrival=0.001)
+    r2 = eng.submit(p0, 6, arrival=0.002)
+    res = eng.run()
+    ref = generate_offline(model, params, p0, 6, MAX_LEN)
+    for rid in (r0, r1, r2):
+        assert res[rid].tokens == ref
+    assert eng.stats.prefix_hits >= 2
+    eng.pool.manager.check()
+
+
+def test_sharing_multiplies_concurrency_vs_committed():
+    """The memory win, pinned at the engine level: a shared-prefix
+    workload that commit-at-admission serves 2-at-a-time fits 4
+    concurrent lanes under sharing (unique high-water stays under the
+    same arena), with identical streams."""
+    model, params = _model("smollm-135m")
+    reqs = _shared_prefix_reqs(model.cfg.vocab_size, shared_len=32, n=4)
+    refs = [generate_offline(model, params, p, m, MAX_LEN)
+            for p, m, _ in reqs]
+
+    def run(sharing):
+        eng = ServeEngine(
+            model, params, n_slots=4, max_len=MAX_LEN,
+            scheduler=Scheduler(4, prefill_chunk=8, decode_per_prefill=2),
+            block_size=8, arena_blocks=13, prefix_sharing=sharing,
+        )
+        rids = [eng.submit(p, m, arrival=a) for p, m, a in reqs]
+        peak = 0
+        while eng.has_work:
+            eng.step()
+            peak = max(peak, sum(r is not None for r in eng.pool.owner))
+        res = {r: eng.request(r) for r in rids}
+        assert [res[r].tokens for r in rids] == refs
+        return eng, peak
+
+    unshared, peak_unshared = run(False)
+    shared, peak_shared = run(True)
+    # every budget is 5-6 blocks: 13 blocks commit only 2 lanes at once,
+    # but 4 adopted lanes (4 shared prefix blocks + ~2 unique each) fit.
+    assert peak_unshared <= 2
+    assert peak_shared >= 2 * peak_unshared
+    assert shared.stats.prefix_hits >= 3
+    assert shared.sched.clock.now < unshared.sched.clock.now
+
+
+def test_restore_slot_busy_under_arena_pressure():
+    """A migration landing on a sharing-mode pool without enough free
+    blocks reports busy (None) instead of crashing — the frontend
+    requeues, local preemption opens space later."""
+    model, params = _model("smollm-135m")
+    rng = np.random.default_rng(2)
+    V = model.cfg.vocab_size
+    src = ServeEngine(model, params, n_slots=2, max_len=MAX_LEN,
+                      block_size=8, prefix_sharing=True)
+    p = rng.integers(0, V, size=20).astype(np.int32)
+    rid = src.submit(p, 8, arrival=0.0)
+    for _ in range(30):
+        if len(src.request(rid).tokens) >= 3:
+            break
+        src.step()
+    ticket = src.export_request(rid)
+    dst = ServeEngine(model, params, n_slots=2, max_len=MAX_LEN,
+                      block_size=8, arena_blocks=7, prefix_sharing=True)
+    filler = dst.submit(rng.integers(0, V, size=40).astype(np.int32), 8)
+    while dst.request(filler).prefilled < 40:
+        dst.step()
+    assert dst.import_request(ticket) is None      # busy, not a crash
+    dst.cancel(filler)
+    assert dst.import_request(ticket) is not None  # space freed → lands
+    dst.pool.manager.check()
+
+
+def test_prefix_sharing_rejects_speculative():
+    model, params = _model("smollm-135m")
+    with pytest.raises(ValueError, match="prefix_sharing"):
+        ServeEngine(model, params, n_slots=2, max_len=MAX_LEN,
+                    block_size=8, prefix_sharing=True,
+                    draft_model=model, draft_params=params)
+    with pytest.raises(ValueError, match="paged"):
+        ServeEngine(model, params, n_slots=2, max_len=MAX_LEN,
+                    prefix_sharing=True)
+
+
+def test_prefix_sharing_rejects_capacity_dropped_moe():
+    """Capacity-dropped MoE logits depend on how many tokens share one
+    forward call, so adoption (which shrinks the suffix prefill) would
+    silently break byte-identity — the engine refuses up front. The same
+    config with ``dropless=True`` is accepted (and pinned byte-identical
+    in the parametrized tests above)."""
+    cfg = get_config("deepseek-v3").reduced()
+    assert cfg.moe is not None and not cfg.moe.dropless
+    model = build_model(cfg)
+    params = model.init(RNG)
+    with pytest.raises(ValueError, match="dropless"):
+        ServeEngine(model, params, n_slots=2, max_len=MAX_LEN,
+                    block_size=8, prefix_sharing=True)
+
+
+@pytest.mark.slow
+def test_preemption_races_inflight_hedge_copy():
+    """Fleet-level pin: sharing replicas with starved arenas preempt
+    while hedge copies of the same request are in flight on other
+    replicas; loser cancellation, retries, and preemption replay all
+    interleave — zero drops, streams byte-identical to offline."""
+    model, params = _model("smollm-135m")
+    rng = np.random.default_rng(21)
+    V = model.cfg.vocab_size
+    shared = rng.integers(0, V, size=16).astype(np.int32)
+    reqs = []
+    for i in range(8):
+        suf = rng.integers(0, V, size=int(rng.integers(2, 6))).astype(np.int32)
+        reqs.append((np.concatenate([shared, suf]), 14, i * 0.002))
+    refs = [generate_offline(model, params, p, m, MAX_LEN)
+            for p, m, _ in reqs]
+    fleet = [
+        Replica(i, model, params, n_slots=2, max_len=MAX_LEN,
+                block_size=8, arena_blocks=6, prefix_sharing=True)
+        for i in range(3)
+    ]
+    fe = Frontend(fleet, DELAY, cost_per_replica=0.001)
+    gids = [fe.submit(p, m, arrival=a) for p, m, a in reqs]
+    out = fe.run()
+    assert all(out[g].done and not out[g].dropped for g in gids)
+    assert [out[g].tokens for g in gids] == refs
+    s = fe.summary()
+    assert s["preemptions"] > 0, "fleet never preempted — loosen the arena"
+    for rep in fe.replicas:
+        mgr = rep.engine.pool.manager
+        assert mgr.n_free_blocks == mgr.num_blocks
+        mgr.check()

@@ -226,6 +226,7 @@ def test_cancel_releases_paged_blocks_under_pressure():
 @pytest.mark.parametrize(
     "arch", ["smollm-135m", "deepseek-v3", "xlstm-125m", "zamba2"]
 )
+@pytest.mark.slow
 @pytest.mark.parametrize("paged", [False, True], ids=["contig", "paged"])
 def test_migration_byte_identity(arch, paged):
     """Export a mid-decode request from one engine, import into another,
@@ -289,6 +290,7 @@ def _fleet(model, params, n=3, n_slots=2):
     ]
 
 
+@pytest.mark.slow
 def test_frontend_fault_free_matches_offline():
     model, params = _model("smollm-135m")
     reqs = _prompts(model.cfg.vocab_size)
@@ -307,6 +309,7 @@ def test_frontend_fault_free_matches_offline():
     assert (fe.router.inflight == 0).all()
 
 
+@pytest.mark.slow
 def test_frontend_chaos_kill_rejoin_zero_drop():
     """Kill 1 of 3 replicas mid-saturation, rejoin later: every request
     completes, none drop, and all streams are byte-identical to the
@@ -325,6 +328,7 @@ def test_frontend_chaos_kill_rejoin_zero_drop():
     assert not fe.replicas[1].alive or fe.replicas[1].engine.pool.n_active == 0
 
 
+@pytest.mark.slow
 def test_frontend_drain_migrates_in_flight():
     """Graceful decommission under single-copy dispatch (replica cost
     high enough that hedging never covers a request twice): decoding
@@ -343,6 +347,7 @@ def test_frontend_drain_migrates_in_flight():
     assert fe.migrations > 0                 # real block handoffs happened
 
 
+@pytest.mark.slow
 def test_frontend_deadline_retry_requeues_elsewhere():
     """A 40x-slowed replica with a tight per-attempt deadline: copies
     expire, requeue on healthy replicas (resuming from the longest
@@ -380,6 +385,7 @@ def test_frontend_retry_budget_drops_and_reports():
     assert fe.summary()["dropped"] == 1
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("drain_step", [6, 9, 12, 15])
 def test_deadline_expiry_racing_drain_resolves_exactly_once(drain_step):
     """A drain exporting copies off a slowed replica while their

@@ -31,14 +31,26 @@ Invariant oracles (each failure names the oracle + detail):
                       state and submitted == completed + dropped;
 * ``exactly_once``  — no ``(gid, attempt)`` admitted twice on one
                       replica (the receiver-side effect dedup must
-                      catch duplicated/retransmitted submits).
+                      catch duplicated/retransmitted submits);
+* ``block_conservation`` — every replica's paged arena passes
+                      ``BlockManager.audit()`` after drain: each
+                      block's refcount equals its live table
+                      references, and free + referenced partition the
+                      arena exactly (no block leaked, none doubly
+                      freed). Runs with or without prefix sharing —
+                      under sharing it is the end-to-end check on the
+                      copy-on-write ledger.
 
 Campaigns run with the reliability layer ON and must pass every oracle
 (CI gates on this). With ``--no-reliable`` or ``--no-dedup`` the same
 harness demonstrates WHY the layer exists: a single dropped data message
 strands the plane, a single duplicated submit double-admits — and the
 shrinker reduces whatever it finds to the one directive that did it
-(pinned in tests/test_chaos_search.py).
+(pinned in tests/test_chaos_search.py). ``--leak-blocks`` seeds a
+refcount bug on the engine's cancel path (one block dropped without a
+free) so the conservation oracle has teeth: only cancel-bearing
+schedules trip it, and ddmin shrinks the repro to that one atom.
+``--prefix-sharing`` runs the whole campaign on copy-on-write fleets.
 
 Usage:
     python tools/chaos_search.py --schedules 500            # full campaign
@@ -204,11 +216,12 @@ class Workload:
     (``model_scoped_cache``)."""
 
     def __init__(self, arch: str = "smollm-135m", n_requests: int = 6,
-                 seed: int = 1):
+                 seed: int = 1, prefix_sharing: bool = False):
         cfg = get_config(arch).reduced()
         self.arch = arch
         self.n_requests = n_requests
         self.seed = seed
+        self.prefix_sharing = bool(prefix_sharing)
         self.model = build_model(cfg)
         self.params = self.model.init(jax.random.PRNGKey(0))
         rng = np.random.default_rng(seed)
@@ -227,12 +240,13 @@ class Workload:
         return {"arch": self.arch, "n_requests": self.n_requests,
                 "seed": self.seed, "n_replicas": N_REPLICAS,
                 "n_slots": N_SLOTS, "block_size": BLOCK_SIZE,
-                "max_len": MAX_LEN}
+                "max_len": MAX_LEN, "prefix_sharing": self.prefix_sharing}
 
     def fleet(self, obs) -> List[Replica]:
         return [
             Replica(i, self.model, self.params, n_slots=N_SLOTS,
-                    max_len=MAX_LEN, block_size=BLOCK_SIZE, obs=obs)
+                    max_len=MAX_LEN, block_size=BLOCK_SIZE,
+                    prefix_sharing=self.prefix_sharing, obs=obs)
             for i in range(N_REPLICAS)
         ]
 
@@ -262,14 +276,18 @@ def run_schedule(
     dedup: bool = True,
     retry_budget: int = 8,
     max_ticks: int = 20_000,
+    leak_blocks: bool = False,
     trace_out: Optional[str] = None,
 ) -> RunReport:
     """One deterministic run of ``sched`` against the oracle set.
     ``trace_out`` dumps the run's virtual-clock trace (Perfetto JSON) —
     the campaign writes one per minimal repro so a violation ships with
-    its full timeline."""
+    its full timeline. ``leak_blocks`` arms the engines' seeded cancel
+    -path refcount bug (teeth for ``block_conservation``)."""
     obs = Observability()
     fleet = wl.fleet(obs)
+    for rep in fleet:
+        rep.engine._chaos_leak_blocks = leak_blocks
     fe = Frontend(
         fleet, SimplifiedDelayModel(lambda_y=2.0),
         cost_per_replica=sched.cost_per_replica,
@@ -329,6 +347,12 @@ def run_schedule(
                 "oracle": "no_leaks",
                 "detail": f"replica {rep.id} arena leaks "
                           f"{mgr.n_used_blocks} blocks",
+            })
+        errs = [] if mgr is None else mgr.audit()
+        if errs:
+            violations.append({
+                "oracle": "block_conservation",
+                "detail": f"replica {rep.id}: " + "; ".join(errs[:3]),
             })
     if not (fe.router.inflight == 0).all():
         violations.append({
@@ -437,7 +461,8 @@ def replay_repro(path: str) -> RunReport:
     with open(path) as f:
         payload = json.load(f)
     w = payload["workload"]
-    wl = Workload(arch=w["arch"], n_requests=w["n_requests"], seed=w["seed"])
+    wl = Workload(arch=w["arch"], n_requests=w["n_requests"], seed=w["seed"],
+                  prefix_sharing=w.get("prefix_sharing", False))
     sched = Schedule.from_dict(payload["schedule"])
     return run_schedule(wl, sched, **payload["knobs"])
 
@@ -445,11 +470,13 @@ def replay_repro(path: str) -> RunReport:
 def run_campaign(
     *, schedules: int, seed: int, fast: bool, reliable: bool, dedup: bool,
     repro_dir: str, out: Optional[str], expect_violations: bool,
+    leak_blocks: bool = False, prefix_sharing: bool = False,
 ) -> int:
-    wl = Workload(n_requests=4 if fast else 6)
+    wl = Workload(n_requests=4 if fast else 6, prefix_sharing=prefix_sharing)
     knobs = {
         "reliable": reliable, "dedup": dedup,
         "retry_budget": 8, "max_ticks": 6_000 if fast else 20_000,
+        "leak_blocks": leak_blocks,
     }
     t0 = time.perf_counter()
     n_bad, repros, op_counts = 0, [], {}
@@ -521,6 +548,11 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     help="disable ack/retransmit (violation demo)")
     ap.add_argument("--no-dedup", action="store_true",
                     help="disable receiver dedup (violation demo)")
+    ap.add_argument("--leak-blocks", action="store_true",
+                    help="seed a cancel-path refcount bug (conservation "
+                         "oracle violation demo)")
+    ap.add_argument("--prefix-sharing", action="store_true",
+                    help="run the fleet with copy-on-write prefix sharing")
     ap.add_argument("--expect-violations", action="store_true",
                     help="exit 0 iff the campaign FINDS (and "
                          "deterministically shrinks) a violation")
@@ -544,6 +576,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         reliable=not args.no_reliable, dedup=not args.no_dedup,
         repro_dir=args.repro_dir, out=args.out,
         expect_violations=args.expect_violations,
+        leak_blocks=args.leak_blocks, prefix_sharing=args.prefix_sharing,
     )
 
 
